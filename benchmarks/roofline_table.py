@@ -1,0 +1,33 @@
+"""Render the EXPERIMENTS.md roofline table from dryrun JSONL records.
+
+Usage: PYTHONPATH=src python benchmarks/roofline_table.py dryrun_single.jsonl
+"""
+import json
+import sys
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def main(paths):
+    recs = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    print("| arch | shape | mesh | compute ms | memory ms | coll ms | bound "
+          "| useful | roofline frac | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        colls = ",".join(f"{k.split('-')[0][:2]}{k.split('-')[1][:1] if '-' in k else ''}:{v}"
+                         for k, v in r["collective_counts"].items() if v)
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {fmt_ms(r['compute_s'])} | {fmt_ms(r['memory_s'])} "
+              f"| {fmt_ms(r['collective_s'])} | {r['dominant'][:4]} "
+              f"| {r['useful_flops_ratio']:.2f} "
+              f"| {r['roofline_fraction']:.3f} | {colls} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["dryrun_single.jsonl"])

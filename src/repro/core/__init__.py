@@ -1,0 +1,4 @@
+from repro.core import cluster, dispatch, profiling, requests, resource_manager, variants
+
+__all__ = ["cluster", "dispatch", "profiling", "requests",
+           "resource_manager", "variants"]

@@ -1,0 +1,111 @@
+"""Profiling table (paper §III-C, Fig. 5): per-node throughput at each
+approximation level.
+
+Rows = approximation levels (0 = most accurate), columns = nodes. The
+``Profile`` FSM state fills a column per node; entries come from either
+
+  * the analytic roofline model — items/s predicted from the variant's
+    FLOPs/bytes per item and the node's (derated) hardware constants; or
+  * measurement — the engine times a scaled-down variant on the node
+    (used in tests/examples where everything runs on CPU).
+
+This is the single data structure the Dispatch Policy reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.core.variants import VariantPool
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+@dataclasses.dataclass
+class NodeProfile:
+    """A worker group: `chips` TPU chips with a capability derate.
+
+    ``capability`` < 1 models thermal/power throttling (the paper's
+    DVFS-under-TDP) or an older chip generation; the Dispatch Policy only
+    ever sees the resulting throughput numbers, exactly as in the paper.
+    """
+    name: str
+    chips: int
+    capability: float = 1.0
+    available: bool = True
+
+
+def variant_item_cost(cfg: ModelConfig, seq_len: int) -> Dict[str, float]:
+    """Analytic per-item (one sequence) cost of an inference: FLOPs and HBM
+    bytes. Inference = prefill of seq_len tokens (paper counts one image =
+    one inference; here one sequence = one inference)."""
+    n_active = cfg.param_count(active_only=True)
+    flops = 2.0 * n_active * seq_len
+    # attention extra: 4*S^2*H*D per layer (causal halves it)
+    s = seq_len
+    attn = 0.0
+    for i in range(cfg.num_layers):
+        if not cfg.layer_is_attn(i):
+            continue
+        eff_s = min(s, cfg.sliding_window) if (
+            cfg.attention_kind == "sliding"
+            or (cfg.attention_kind == "local_global"
+                and not cfg.layer_is_global_attn(i))) else s
+        attn += 2.0 * s * eff_s * cfg.num_heads * cfg.head_dim
+    flops += attn
+    bytes_ = 2.0 * n_active  # weights streamed once per item at batch~1;
+    # amortised by batching — we fold a standard serving batch of 8:
+    bytes_ = bytes_ / 8 + 2.0 * 2 * s * cfg.num_layers * cfg.kv_dim
+    return {"flops": flops, "bytes": bytes_}
+
+
+def analytic_throughput(cfg: ModelConfig, seq_len: int, chips: int,
+                        capability: float) -> float:
+    """Roofline-model items/s for one node running this variant."""
+    cost = variant_item_cost(cfg, seq_len)
+    t_compute = cost["flops"] / (PEAK_FLOPS * chips * capability)
+    t_memory = cost["bytes"] / (HBM_BW * chips * capability)
+    return 1.0 / max(t_compute, t_memory)
+
+
+class ProfilingTable:
+    """profiling_table[m][n] — throughput of node n at approximation m."""
+
+    def __init__(self, pool: VariantPool, nodes: Sequence[NodeProfile],
+                 seq_len: int = 128,
+                 measured: Optional[np.ndarray] = None):
+        self.pool = pool
+        self.nodes = list(nodes)
+        self.seq_len = seq_len
+        m, n = len(pool), len(self.nodes)
+        if measured is not None:
+            assert measured.shape == (m, n)
+            self.perf = np.asarray(measured, dtype=np.float64)
+        else:
+            self.perf = np.zeros((m, n))
+            for i, v in enumerate(pool.variants):
+                for j, node in enumerate(self.nodes):
+                    self.perf[i, j] = analytic_throughput(
+                        v.config, seq_len, node.chips, node.capability)
+        self.accuracies = np.asarray(pool.accuracies)
+
+    @property
+    def num_levels(self) -> int:
+        return self.perf.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.perf.shape[1]
+
+    def update_node(self, j: int, column: np.ndarray):
+        """NetCom state: merge a (re-)profiled column from node j."""
+        self.perf[:, j] = column
+
+    def scale_node(self, j: int, factor: float):
+        """Straggler mitigation: EWMA capability decay observed at runtime."""
+        self.perf[:, j] *= factor
+
+    def available_columns(self, avail: Sequence[bool]) -> np.ndarray:
+        return self.perf[:, np.asarray(avail, dtype=bool)]

@@ -1,0 +1,82 @@
+"""Inference request / result / violation accounting (paper §III-A, §IV-B).
+
+A request R is a batch of inputs (the paper: images; here: sequences) with a
+performance requirement ``perf_req`` (inferences/s) and an accuracy
+requirement ``acc_req`` (%). The queue at the gateway node is a vector of
+(R, P|A) tuples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceRequest:
+    rid: int
+    num_items: int              # batch size R (images / sequences)
+    perf_req: float             # required throughput, items/s
+    acc_req: float              # required output accuracy, %
+    seq_len: int = 128          # per-item sequence length (LM serving)
+
+
+@dataclasses.dataclass(frozen=True)
+class Assignment:
+    """Per-node share of one dispatch: workload w_i and approximation l_i."""
+    node: str
+    items: int                  # w_i
+    apx_level: int              # model variant index (0 = most accurate)
+    perf_alloc: float           # table throughput backing this share
+
+
+@dataclasses.dataclass(frozen=True)
+class Dispatch:
+    request: InferenceRequest
+    assignments: Tuple[Assignment, ...]
+    policy: str
+
+    @property
+    def total_items(self) -> int:
+        return sum(a.items for a in self.assignments)
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    """Achieved performance/accuracy of one executed dispatch."""
+    request: InferenceRequest
+    policy: str
+    achieved_perf: float        # items/s (R / makespan)
+    achieved_acc: float         # workload-weighted accuracy %
+    makespan_s: float
+    per_node_time: Dict[str, float]
+
+    @property
+    def perf_violation(self) -> float:
+        if self.request.perf_req <= 0:
+            return 0.0
+        return max(0.0, (self.request.perf_req - self.achieved_perf)
+                   / self.request.perf_req)
+
+    @property
+    def acc_violation(self) -> float:
+        return max(0.0, self.request.acc_req - self.achieved_acc)
+
+    @property
+    def meets_perf(self) -> bool:
+        return self.achieved_perf >= self.request.perf_req * (1 - 1e-9)
+
+    @property
+    def meets_acc(self) -> bool:
+        return self.achieved_acc >= self.request.acc_req - 1e-9
+
+
+def violation_summary(results: Sequence[ExecutionResult]) -> Dict[str, float]:
+    n = max(len(results), 1)
+    return {
+        "perf_violation_rate": sum(not r.meets_perf for r in results) / n,
+        "acc_violation_rate": sum(not r.meets_acc for r in results) / n,
+        "mean_perf_violation": sum(r.perf_violation for r in results) / n,
+        "mean_acc_violation": sum(r.acc_violation for r in results) / n,
+        "mean_perf": sum(r.achieved_perf for r in results) / n,
+        "mean_acc": sum(r.achieved_acc for r in results) / n,
+    }

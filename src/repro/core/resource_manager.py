@@ -1,0 +1,186 @@
+"""Distributed Resource Manager: Gateway/Local-node FSMs (paper Fig. 4).
+
+Gateway Node (GN) states: PROFILE -> NETCOM -> {DISTRIBUTE on workload |
+DISTRIBUTE on disconnect} -> NETCOM (broadcast) -> INFERENCE -> NETCOM.
+Local Node (LN) states:   PROFILE -> NETCOM -> (wait) -> INFERENCE -> NETCOM.
+
+The implementation is event-driven over an in-process message bus standing
+in for the paper's POSIX sockets; on a real fleet the bus maps onto the
+coordinator RPC plane (the data plane stays pjit'd per-group inference).
+Every transition is logged so tests can assert the exact FSM sequences,
+including the disconnect -> re-Distribute path (paper Fig. 9) and the
+beyond-paper straggler EWMA decay.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import dispatch as dispatch_lib
+from repro.core.cluster import SimBackend
+from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.requests import (Dispatch, ExecutionResult, InferenceRequest,
+                                 violation_summary)
+
+
+class GNState(enum.Enum):
+    PROFILE = "profile"
+    NETCOM = "netcom"
+    DISTRIBUTE = "distribute"
+    INFERENCE = "inference"
+
+
+class LNState(enum.Enum):
+    PROFILE = "profile"
+    NETCOM = "netcom"
+    WAIT = "wait"
+    INFERENCE = "inference"
+
+
+@dataclasses.dataclass
+class Event:
+    kind: str                 # "workload" | "disconnect" | "reconnect" | "straggler"
+    request: Optional[InferenceRequest] = None
+    node: Optional[str] = None
+    slowdown: float = 1.0
+
+
+class LocalNode:
+    """LN FSM: profiles itself, waits for (workload, apx) and runs it."""
+
+    def __init__(self, profile: NodeProfile):
+        self.profile = profile
+        self.state = LNState.PROFILE
+        self.log: List[LNState] = [self.state]
+
+    def _to(self, s: LNState):
+        self.state = s
+        self.log.append(s)
+
+    def run_profile(self, table: ProfilingTable, j: int) -> np.ndarray:
+        """PROFILE: measure/predict own column, then NETCOM it to the GN."""
+        assert self.state == LNState.PROFILE
+        column = table.perf[:, j].copy()
+        self._to(LNState.NETCOM)
+        self._to(LNState.WAIT)
+        return column
+
+    def run_inference(self, items: int, apx_level: int,
+                      backend_time: float) -> Dict[str, float]:
+        assert self.state == LNState.WAIT
+        self._to(LNState.INFERENCE)
+        result = {"items": items, "apx": apx_level, "time_s": backend_time}
+        self._to(LNState.NETCOM)
+        self._to(LNState.WAIT)
+        return result
+
+
+class GatewayNode:
+    """GN FSM (paper Fig. 4) orchestrating the cluster.
+
+    ``policy`` selects the dispatch strategy; the paper's is
+    ``proportional``. Straggler mitigation (beyond paper): the GN applies an
+    EWMA decay to a node's profiled column when its observed per-item time
+    exceeds the table prediction.
+    """
+
+    def __init__(self, table: ProfilingTable, backend: SimBackend,
+                 policy: str = "proportional", *,
+                 straggler_ewma: float = 0.5):
+        self.table = table
+        self.backend = backend
+        self.policy = policy
+        self.state = GNState.PROFILE
+        self.log: List[GNState] = [self.state]
+        self.locals: Dict[str, LocalNode] = {
+            n.name: LocalNode(n) for n in table.nodes}
+        self.results: List[ExecutionResult] = []
+        self.dispatches: List[Dispatch] = []
+        self.straggler_ewma = straggler_ewma
+        self._profiled = False
+
+    def _to(self, s: GNState):
+        self.state = s
+        self.log.append(s)
+
+    # ---- PROFILE + initial NETCOM ------------------------------------
+    def startup(self):
+        """PROFILE own column, NETCOM gathers LN columns into the table."""
+        assert self.state == GNState.PROFILE
+        for j, (name, ln) in enumerate(self.locals.items()):
+            col = ln.run_profile(self.table, j)
+            self.table.update_node(j, col)
+        self._profiled = True
+        self._to(GNState.NETCOM)
+
+    # ---- event loop ---------------------------------------------------
+    def handle(self, ev: Event) -> Optional[ExecutionResult]:
+        assert self._profiled, "startup() first"
+        if ev.kind == "workload":
+            return self._handle_workload(ev.request)
+        if ev.kind == "disconnect":
+            self._set_available(ev.node, False)
+            # Fig. 4: disconnection triggers re-Distribute of the current
+            # workload over the survivors (handled on next workload or by
+            # redistribute() for an in-flight one)
+            return None
+        if ev.kind == "reconnect":
+            self._set_available(ev.node, True)
+            return None
+        if ev.kind == "straggler":
+            self.backend.set_straggler(ev.node, ev.slowdown)
+            return None
+        raise ValueError(ev.kind)
+
+    def _set_available(self, node: str, avail: bool):
+        for n in self.table.nodes:
+            if n.name == node:
+                n.available = avail
+
+    def _handle_workload(self, request: InferenceRequest) -> ExecutionResult:
+        # NETCOM -> DISTRIBUTE (dispatch policy) -> NETCOM (broadcast)
+        self._to(GNState.DISTRIBUTE)
+        d = dispatch_lib.dispatch(self.policy, self.table, request)
+        self.dispatches.append(d)
+        self._to(GNState.NETCOM)
+        # INFERENCE: LNs execute their shares
+        self._to(GNState.INFERENCE)
+        result = self.backend.execute(d)
+        for a in d.assignments:
+            if a.items > 0:
+                ln = self.locals[a.node]
+                ln.run_inference(a.items, a.apx_level,
+                                 result.per_node_time.get(a.node, 0.0))
+        # straggler mitigation: decay profiled perf toward observed perf
+        self._apply_straggler_feedback(d, result)
+        self._to(GNState.NETCOM)
+        self.results.append(result)
+        return result
+
+    def redistribute(self, request: InferenceRequest) -> ExecutionResult:
+        """Disconnect-during-execution path: re-enter DISTRIBUTE with the
+        surviving nodes and re-run the request (paper Fig. 4 right edge)."""
+        return self._handle_workload(request)
+
+    def _apply_straggler_feedback(self, d: Dispatch, r: ExecutionResult):
+        names = [n.name for n in self.table.nodes]
+        for a in d.assignments:
+            if a.items == 0:
+                continue
+            observed_t = r.per_node_time.get(a.node)
+            if observed_t is None or observed_t <= 0:
+                continue
+            j = names.index(a.node)
+            predicted_t = a.items / max(self.table.perf[a.apx_level, j], 1e-9)
+            ratio = predicted_t / observed_t          # <1 means slower
+            if ratio < 0.95:
+                w = self.straggler_ewma
+                self.table.scale_node(j, w * 1.0 + (1 - w) * ratio)
+
+    # ---- reporting ------------------------------------------------------
+    def summary(self) -> Dict[str, float]:
+        return violation_summary(self.results)

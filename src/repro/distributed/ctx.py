@@ -1,0 +1,38 @@
+"""Activation-sharding context: models call ``shard_activation(x, dims)``
+with logical dims; a rule-set installed by the launcher turns that into
+``with_sharding_constraint``. With no rules installed (unit tests, CPU
+smoke) it is the identity — models stay mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_sharding_rules(rules):
+    """rules: repro.distributed.sharding.Rules (carries the mesh)."""
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shard_activation(x: jax.Array, dims: Tuple[Optional[str], ...]) -> jax.Array:
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec_for(x.shape, dims)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh, spec))

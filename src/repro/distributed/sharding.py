@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules -> PartitionSpecs / NamedShardings.
+
+Params and activations are annotated with *logical* dims (``ParamSpec.dims``
+and the ``shard_activation`` call sites). A ``Rules`` object maps each
+logical dim to a priority list of mesh-axis tuples; the first candidate
+whose axes exist in the mesh, are unused within the tensor, and evenly
+divide the dim size wins. This gives graceful degradation (e.g. mixtral's 8
+experts can't shard over a 16-way axis -> fall through to sharding d_model)
+without per-arch special cases.
+
+Rule sets:
+  * TRAIN  — fully-sharded params (ZeRO-3-ish: big tensors sharded over both
+    data and model axes; XLA inserts the per-layer all-gathers inside the
+    scan), batch over (pod, data).
+  * SERVE  — TP + EP: params sharded over model (+ experts over the full
+    chip grid when divisible), replicated over data so decode steps pay no
+    per-layer param all-gathers; batch over data.
+  * SERVE_LONG — long-context decode (batch=1): KV/sequence dims take the
+    data axis (sequence parallelism), params as SERVE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisCand = Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class Rules:
+    mesh: Mesh
+    table: Dict[str, List[AxisCand]]
+    name: str = "custom"
+
+    def spec_for(self, shape: Sequence[int], dims: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(dims), (shape, dims)
+        used: set = set()
+        parts = []
+        axis_sizes = dict(self.mesh.shape)   # works for Mesh & AbstractMesh
+        for size, dim in zip(shape, dims):
+            choice = None
+            for cand in self.table.get(dim, ()):
+                if not all(a in axis_sizes and a not in used for a in cand):
+                    continue
+                total = math.prod(axis_sizes[a] for a in cand)
+                if total > 1 and size % total == 0:
+                    choice = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+            parts.append(choice)
+        while parts and parts[-1] is None:   # normalise
+            parts.pop()
+        return P(*parts)
+
+    def named_sharding(self, shape, dims) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, dims))
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def tree_shardings(rules: Rules, shapes_tree, axes_tree):
+    """shapes_tree: pytree of ShapeDtypeStruct/arrays; axes_tree: matching
+    structure whose leaves are logical-dims tuples."""
+    flat_s, tdef = jax.tree_util.tree_flatten(shapes_tree)
+    flat_a = jax.tree_util.tree_flatten(axes_tree, is_leaf=_is_axes_leaf)[0]
+    assert len(flat_s) == len(flat_a)
+    out = [rules.named_sharding(s.shape, a) for s, a in zip(flat_s, flat_a)]
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+# ----------------------------------------------------------------------
+_TRAIN_TABLE: Dict[str, List[AxisCand]] = {
+    # params — fully sharded (FSDP x TP)
+    "vocab": [("model",)],
+    "d_model": [("pod", "data"), ("data",)],
+    "d_model_out": [("model",)],
+    "heads": [("model",)],
+    "heads_flat": [("model",)],
+    "kv_heads": [("model",)],
+    "d_ff": [("model",)],
+    "expert_ff": [("model",)],
+    "experts": [("pod", "data"), ("data",)],
+    "lora": [("model",)],
+    "lora_out": [("model",)],
+    # activations
+    "batch": [("pod", "data"), ("data",)],
+    "seq": [],
+    # attention-score fallback: if kv/q heads can't take the model axis
+    # (e.g. 8 kv heads on a 16-way axis), shard the query-seq dim instead
+    "scores_seq": [("model",)],
+}
+
+_SERVE_TABLE: Dict[str, List[AxisCand]] = {
+    # params — TP (+EP over the full grid when divisible); replicated on data
+    "vocab": [("model",)],
+    "d_model": [],
+    "d_model_out": [("model",)],
+    "heads": [("model",)],
+    "heads_flat": [("model",)],
+    "kv_heads": [("model",)],
+    "d_ff": [("model",)],
+    "expert_ff": [("model",)],
+    "experts": [("pod", "data", "model"), ("data", "model"), ("model",)],
+    "lora": [],
+    "lora_out": [("model",)],
+    # activations / caches: batch over data; the KV-cache sequence dim over
+    # model so the cache (the decode working set) is sharded over ALL chips
+    "batch": [("pod", "data"), ("data",)],
+    "seq": [],
+    "kv_seq": [("model",)],
+    # prefill: O(S^2) scores need the same fallback sharding as train
+    "scores_seq": [("model",)],
+}
+
+_SERVE_LONG_TABLE: Dict[str, List[AxisCand]] = dict(
+    _SERVE_TABLE,
+    batch=[],
+    # batch=1: shard sequence dims instead (sequence parallelism)
+    seq=[("pod", "data"), ("data",)],
+    kv_seq=[("pod", "data", "model"), ("data", "model"), ("model",)],
+)
+
+_TABLES = {"train": _TRAIN_TABLE, "serve": _SERVE_TABLE,
+           "serve_long": _SERVE_LONG_TABLE}
+
+
+def make_rules(mesh: Mesh, mode: str) -> Rules:
+    return Rules(mesh=mesh, table=_TABLES[mode], name=mode)
+
+
+def param_shardings(rules: Rules, cfg, dtype=None):
+    """NamedShardings for the full model param tree."""
+    from repro.models import transformer as tfm
+    shapes = tfm.abstract_params(cfg)
+    axes = tfm.param_logical_axes(cfg)
+    return tree_shardings(rules, shapes, axes)
+
+
+def cache_shardings(rules: Rules, cfg, batch: int, max_len: int,
+                    dtype=None):
+    """NamedShardings for the decode-cache pytree.
+
+    Cache leaves are identified by shape pattern: dims with size ``batch``
+    get the batch rule; for GQA/MLA caches the sequence dim gets the seq
+    rule (relevant for serve_long).
+    """
+    from repro.models import transformer as tfm
+    abstract = tfm.abstract_cache(cfg, batch, max_len)
+
+    def leaf_sharding(leaf):
+        # leading dim is n_units (layers) — never sharded
+        dims: List[Optional[str]] = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            dims[1] = "batch"
+        # seq dim: KV caches are (L, B, S, ...) with S == cache length
+        if leaf.ndim >= 3 and leaf.shape[2] >= 1024:
+            dims[2] = "kv_seq"
+        return rules.named_sharding(leaf.shape, dims)
+
+    return jax.tree_util.tree_map(leaf_sharding, abstract)

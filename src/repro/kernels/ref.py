@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, softcap: float = 0.0,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B,H,S,D); k/v: (B,KV,S,D) -> (B,H,S,D)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kv, g, s, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qi = jnp.arange(s)[:, None]
+    kj = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+    return out.reshape(b, h, s, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, mask, *, softcap: float = 0.0,
+                         scale: Optional[float] = None) -> jax.Array:
+    """q: (B,KV,G,D); k/v: (B,KV,S,D); mask: (B,S) -> (B,KV,G,D)."""
+    b, kv, g, d = q.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bkgd,bktd->bkgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssm_scan_ref(u, dt, bm, cm, a, d_skip):
+    """u/dt: (B,S,d); bm/cm: (B,S,N); a: (d,N); d_skip: (d,) ->
+    (y (B,S,d), h_final (B,d,N) fp32)."""
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * a)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    b = u.shape[0]
+    h0 = jnp.zeros((b, u.shape[2], a.shape[1]), jnp.float32)
+    xs = (jnp.moveaxis(uf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cm.astype(jnp.float32), 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)
+    return (y + uf * d_skip).astype(u.dtype), h_final
+
+
+def rwkv6_wkv_ref(r, k, v, w, u):
+    """r/k/w: (BH,S,Dk); v: (BH,S,Dv); u: (BH,Dk) ->
+    (y (BH,S,Dv), s_final (BH,Dk,Dv) fp32)."""
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # (BH,D*)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (BH,Dk,Dv)
+        y = jnp.einsum("bk,bkv->bv", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    bh, s_len, dk = r.shape
+    s0 = jnp.zeros((bh, dk, v.shape[-1]), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_final

@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape) cell.
+
+No device allocation happens here — these are the abstract inputs the
+dry-run lowers against (weak-type-correct, shardable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+
+
+def token_seq_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Token positions (total sequence length minus stub-embedding region)."""
+    if cfg.frontend_stub:
+        return max(shape.seq_len - cfg.stub_embed_len, 8)
+    return shape.seq_len
+
+
+def _act_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b = shape.global_batch
+    s_tok = token_seq_len(cfg, shape)
+    dt = _act_dtype(cfg)
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32)}
+        if cfg.frontend_stub:
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.stub_embed_len, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32)}
+        if cfg.frontend_stub:
+            out["embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.stub_embed_len, cfg.d_model), dt)
+        return out
+    if shape.kind == "decode":
+        return {
+            "caches": model_lib.abstract_cache(cfg, b, shape.seq_len, dtype=dt),
+            "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,8 @@
+from repro.models import model
+from repro.models.model import (abstract_cache, abstract_params, decode_step,
+                                forward, init_cache, init_params, loss_fn,
+                                param_logical_axes, prefill)
+
+__all__ = ["model", "forward", "loss_fn", "prefill", "decode_step",
+           "init_params", "abstract_params", "init_cache", "abstract_cache",
+           "param_logical_axes"]

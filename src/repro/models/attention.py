@@ -1,0 +1,279 @@
+"""Attention variants: GQA (full / sliding-window / local+global) and MLA.
+
+Two execution paths per variant:
+  * dense path — full-sequence (train / prefill), causal (+window) mask;
+  * decode path — one query token against a preallocated KV cache.
+
+The einsum implementation here is the reference; the Pallas kernels in
+``repro.kernels`` are swapped in via ``repro.kernels.ops`` when enabled.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import shard_activation
+from repro.models.layers import ParamSpec, apply_rope, rms_norm, softcap
+
+NEG_INF = -2.3819763e38  # large negative for masking (bf16-safe)
+
+
+class KVCache(NamedTuple):
+    """Per-layer KV cache. For sliding layers the seq dim is the window and
+    writes wrap (ring buffer; keys stored post-RoPE)."""
+    k: jax.Array           # (B, S_cache, KV, D)
+    v: jax.Array           # (B, S_cache, KV, D)
+
+
+# ----------------------------------------------------------------------
+# GQA
+def attn_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    specs = {
+        "wq": ParamSpec((d, cfg.num_heads, cfg.head_dim),
+                        ("d_model", "heads", "head_dim")),
+        "wk": ParamSpec((d, cfg.num_kv_heads, cfg.head_dim),
+                        ("d_model", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, cfg.num_kv_heads, cfg.head_dim),
+                        ("d_model", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.num_heads, cfg.head_dim, d),
+                        ("heads", "head_dim", "d_model")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((cfg.head_dim,), (None,), init="ones")
+        specs["k_norm"] = ParamSpec((cfg.head_dim,), (None,), init="ones")
+    return specs
+
+
+def _causal_mask(s_q: int, s_k: int, window: int | None) -> jax.Array:
+    """(s_q, s_k) boolean mask; query i at absolute pos i+(s_k-s_q)."""
+    qi = jnp.arange(s_q)[:, None] + (s_k - s_q)
+    kj = jnp.arange(s_k)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    return m
+
+
+def gqa_scores_softmax(q, k, v, mask, attn_softcap: float, scale: float):
+    """q:(B,Sq,H,D) k,v:(B,Sk,KV,D) mask:(B|1,Sq,Sk) -> (B,Sq,H,D).
+
+    Scores accumulate in fp32 via preferred_element_type — no fp32
+    materialisation of K/V (that would double decode HBM traffic)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    # shard the O(S^2) scores: kv-heads over model when divisible, else the
+    # query-sequence dim (graceful fallback for 8-kv-head archs on a 16-way
+    # model axis) — without this, scores replicate per device and dominate
+    # both HBM traffic and FLOPs at train shapes.
+    scores = shard_activation(scores,
+                              ("batch", "kv_heads", "heads", "scores_seq", None))
+    scores = softcap(scores, attn_softcap)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)
+
+
+def gqa_attention_dense(cfg: ModelConfig, p, x: jax.Array,
+                        positions: jax.Array, *, is_global: bool,
+                        use_kernel: bool = False) -> Tuple[jax.Array, KVCache]:
+    """Full-sequence causal attention. Returns output and the (roped) K/V
+    to seed a decode cache."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"].astype(jnp.float32), cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"].astype(jnp.float32), cfg.norm_eps)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    window = None
+    if cfg.attention_kind == "sliding" or (
+            cfg.attention_kind == "local_global" and not is_global):
+        window = cfg.sliding_window
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, window=window,
+                                   attn_softcap=cfg.attn_logit_softcap,
+                                   scale=scale)
+    else:
+        mask = _causal_mask(s, s, window)[None]
+        out = gqa_scores_softmax(q, k, v, mask, cfg.attn_logit_softcap, scale)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return proj, KVCache(k=k, v=v)
+
+
+def gqa_attention_decode(cfg: ModelConfig, p, x: jax.Array,
+                         cache: KVCache, lengths: jax.Array, *,
+                         is_global: bool,
+                         use_kernel: bool = False) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, d_model); lengths: (B,) tokens already in
+    cache (the new token's absolute position)."""
+    b = x.shape[0]
+    s_cache = cache.k.shape[1]
+    window = None
+    if cfg.attention_kind == "sliding" or (
+            cfg.attention_kind == "local_global" and not is_global):
+        window = cfg.sliding_window
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"].astype(jnp.float32), cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"].astype(jnp.float32), cfg.norm_eps)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, lengths[:, None], cfg.rope_theta)
+        k = apply_rope(k, lengths[:, None], cfg.rope_theta)
+
+    # ring-buffer write for windowed layers, linear write otherwise.
+    # Scatter (not one-hot rewrite): only B rows are touched, so with buffer
+    # donation the update is in-place — decode must not re-write the cache.
+    write_idx = lengths % s_cache if window is not None else lengths
+    rows = jnp.arange(x.shape[0])
+    new_k = cache.k.at[rows, write_idx].set(k[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[rows, write_idx].set(v[:, 0].astype(cache.v.dtype))
+
+    # valid slots: slot < min(len+1, S) (ring buffer holds last S positions)
+    n_valid = jnp.minimum(lengths + 1, s_cache)
+    slot = jnp.arange(s_cache)[None, :]
+    mask = slot < n_valid[:, None]                              # (B, S)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q, new_k, new_v, mask,
+                                    attn_softcap=cfg.attn_logit_softcap,
+                                    scale=scale)
+    else:
+        out = gqa_scores_softmax(q, new_k, new_v, mask[:, None, :],
+                                 cfg.attn_logit_softcap, scale)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return proj, KVCache(k=new_k, v=new_v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                  is_global: bool, dtype=jnp.bfloat16) -> KVCache:
+    s = max_len
+    if cfg.attention_kind == "sliding" or (
+            cfg.attention_kind == "local_global" and not is_global):
+        s = min(max_len, cfg.sliding_window)
+    shape = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# ----------------------------------------------------------------------
+# MLA (DeepSeek-V3): latent KV cache + decode-time weight absorption.
+class MLACache(NamedTuple):
+    latent: jax.Array      # (B, S, kv_lora_rank)  — compressed KV
+    k_rope: jax.Array      # (B, S, qk_rope_head_dim) — shared rope key
+
+
+def mla_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    # "lora_out" (output dim of the down-projections) is TP-shardable in
+    # serve mode; "lora" as a contracting dim stays replicated there.
+    d, m, h = cfg.d_model, cfg.mla, cfg.num_heads
+    return {
+        "w_dq": ParamSpec((d, m.q_lora_rank), ("d_model", "lora_out")),
+        "q_norm": ParamSpec((m.q_lora_rank,), (None,), init="ones"),
+        "w_uq": ParamSpec((m.q_lora_rank, h, m.qk_nope_head_dim + m.qk_rope_head_dim),
+                          ("lora", "heads", "head_dim")),
+        "w_dkv": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                           ("d_model", "lora_out")),
+        "kv_norm": ParamSpec((m.kv_lora_rank,), (None,), init="ones"),
+        "w_uk": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                          ("lora", "heads", "head_dim")),
+        "w_uv": ParamSpec((m.kv_lora_rank, h, m.v_head_dim),
+                          ("lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", "head_dim", "d_model")),
+    }
+
+
+def _mla_qkv_latent(cfg, p, x, positions):
+    """Shared projection work: returns roped q_nope/q_rope and the cacheable
+    (latent, k_rope)."""
+    m = cfg.mla
+    q_l = rms_norm(x @ p["w_dq"].astype(x.dtype), p["q_norm"].astype(jnp.float32),
+                   cfg.norm_eps)
+    q = jnp.einsum("bsl,lhk->bshk", q_l, p["w_uq"].astype(x.dtype))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"].astype(x.dtype)
+    latent = rms_norm(dkv[..., :m.kv_lora_rank],
+                      p["kv_norm"].astype(jnp.float32), cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)[..., 0, :]              # (B,S,rope)
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_attention_dense(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
+                        ) -> Tuple[jax.Array, MLACache]:
+    """Full-sequence MLA (train / prefill): decompress K/V directly."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope, latent, k_rope = _mla_qkv_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", latent, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsl,lhk->bshk", latent, p["w_uv"].astype(x.dtype))
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bshk,bthk->bhst", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    mask = _causal_mask(s, s, None)[None, None]
+    probs = jax.nn.softmax(jnp.where(mask, scores, NEG_INF), axis=-1)
+    out = jnp.einsum("bhst,bthk->bshk", probs.astype(v.dtype), v)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return proj, MLACache(latent=latent, k_rope=k_rope)
+
+
+def mla_attention_decode(cfg: ModelConfig, p, x: jax.Array, cache: MLACache,
+                         lengths: jax.Array) -> Tuple[jax.Array, MLACache]:
+    """One-token MLA decode with weight absorption: scores and values are
+    computed in the rank-`kv_lora` latent space (MQA-style), so per-step cost
+    is O(S · kv_lora) instead of O(S · H · head_dim)."""
+    m = cfg.mla
+    b = x.shape[0]
+    s_cache = cache.latent.shape[1]
+    q_nope, q_rope, latent_t, k_rope_t = _mla_qkv_latent(
+        cfg, p, x, lengths[:, None])
+    # absorb w_uk into q: (B,1,H,nope) @ (lora,H,nope) -> (B,1,H,lora)
+    q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, p["w_uk"].astype(x.dtype))
+
+    rows = jnp.arange(b)
+    latent = cache.latent.at[rows, lengths].set(
+        latent_t[:, 0].astype(cache.latent.dtype))
+    k_rope = cache.k_rope.at[rows, lengths].set(
+        k_rope_t[:, 0].astype(cache.k_rope.dtype))
+
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (jnp.einsum("bshl,btl->bhst", q_lat, latent,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    mask = (jnp.arange(s_cache)[None, :] <= lengths[:, None])[:, None, None]
+    probs = jax.nn.softmax(jnp.where(mask, scores, NEG_INF), axis=-1)
+    # attend in latent space, then decompress once per step
+    out_lat = jnp.einsum("bhst,btl->bshl", probs.astype(latent.dtype), latent)
+    out = jnp.einsum("bshl,lhk->bshk", out_lat, p["w_uv"].astype(x.dtype))
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return proj, MLACache(latent=latent, k_rope=k_rope)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        latent=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype))

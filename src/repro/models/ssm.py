@@ -1,0 +1,250 @@
+"""State-space / linear-recurrence mixers: Mamba (jamba) and RWKV6 (Finch).
+
+Both are implemented as a ``lax.scan`` over time with state vectorised over
+(batch, channels) — the TPU-native shape of these recurrences (the CUDA
+selective-scan kernel is likewise sequential in time, parallel in channels).
+A chunked Pallas kernel (``repro.kernels.ssm_scan`` / ``rwkv6_wkv``) replaces
+the inner loop for the perf path.
+
+Decode is a single recurrence step against a carried state — O(1) in
+sequence length, which is exactly why these archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, ParamTree, layer_norm
+
+
+# ======================================================================
+# Mamba (selective scan, mamba1-style as used by Jamba)
+class MambaState(NamedTuple):
+    h: jax.Array          # (B, d_in, N) SSM state
+    conv: jax.Array       # (B, d_conv-1, d_in) rolling conv window
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, cfg.d_model // 16)
+
+
+def mamba_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    r = _dt_rank(cfg)
+    return {
+        "w_in": ParamSpec((d, 2 * d_in), ("d_model", "d_ff")),
+        "w_conv": ParamSpec((s.d_conv, d_in), (None, "d_ff")),
+        "b_conv": ParamSpec((d_in,), ("d_ff",), init="zeros"),
+        "w_x": ParamSpec((d_in, r + 2 * s.d_state), ("d_ff", None)),
+        "w_dt": ParamSpec((r, d_in), (None, "d_ff")),
+        "b_dt": ParamSpec((d_in,), ("d_ff",), init="zeros"),
+        "a_log": ParamSpec((d_in, s.d_state), ("d_ff", None), init="ones"),
+        "d_skip": ParamSpec((d_in,), ("d_ff",), init="ones"),
+        "w_out": ParamSpec((d_in, d), ("d_ff", "d_model")),
+    }
+
+
+def _mamba_inner(cfg, p, xz, conv_state):
+    """Shared projections for a window of tokens.
+    xz: (B, S, 2*d_in); conv_state: (B, d_conv-1, d_in).
+    Returns (u, dt, Bm, Cm, z, new_conv_state)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    r = _dt_rank(cfg)
+    x_part, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over time, seeded with carried window
+    xc = jnp.concatenate([conv_state, x_part], axis=1)          # (B, S+c-1, d_in)
+    w = p["w_conv"].astype(xz.dtype)                            # (c, d_in)
+    u = sum(xc[:, i:i + x_part.shape[1]] * w[i] for i in range(s.d_conv))
+    u = jax.nn.silu(u + p["b_conv"].astype(xz.dtype))
+    new_conv = xc[:, -(s.d_conv - 1):] if s.d_conv > 1 else conv_state
+
+    proj = u @ p["w_x"].astype(xz.dtype)                        # (B,S,r+2N)
+    dt = jax.nn.softplus(proj[..., :r] @ p["w_dt"].astype(xz.dtype)
+                         + p["b_dt"].astype(xz.dtype))          # (B,S,d_in)
+    Bm = proj[..., r:r + s.d_state].astype(jnp.float32)         # (B,S,N)
+    Cm = proj[..., r + s.d_state:].astype(jnp.float32)          # (B,S,N)
+    return u, dt, Bm, Cm, z, new_conv
+
+
+def mamba_apply_dense(cfg: ModelConfig, p: ParamTree, x: jax.Array,
+                      state: MambaState | None = None,
+                      use_kernel: bool = False,
+                      ) -> Tuple[jax.Array, MambaState]:
+    """Full-sequence selective scan. x: (B, S, d).
+
+    ``use_kernel`` routes the recurrence through the Pallas ssm_scan kernel
+    (fresh state only — the engine always prefills from scratch)."""
+    s = cfg.ssm
+    b, seq, d = x.shape
+    d_in = s.expand * d
+    fresh = state is None
+    if state is None:
+        state = init_mamba_state(cfg, b, dtype=x.dtype)
+    xz = x @ p["w_in"].astype(x.dtype)
+    u, dt, Bm, Cm, z, new_conv = _mamba_inner(cfg, p, xz, state.conv)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                # (d_in, N)
+
+    if use_kernel and fresh and seq > 1:
+        from repro.kernels import ops as kops
+        y, h_final = kops.ssm_scan(u, dt, Bm, Cm, a,
+                                   p["d_skip"].astype(jnp.float32))
+        y = y.astype(x.dtype)
+    else:
+        def step(h, inputs):
+            u_t, dt_t, b_t, c_t = inputs                        # (B,d_in),(B,d_in),(B,N),(B,N)
+            da = jnp.exp(dt_t[..., None] * a)                   # (B,d_in,N)
+            h = da * h + (dt_t * u_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y
+
+        xs = (jnp.moveaxis(u, 1, 0),
+              jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+              jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+        h_final, ys = jax.lax.scan(step, state.h.astype(jnp.float32), xs)
+        y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)              # (B,S,d_in)
+        y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(x.dtype)
+    return out, MambaState(h=h_final, conv=new_conv)
+
+
+def mamba_apply_decode(cfg: ModelConfig, p: ParamTree, x: jax.Array,
+                       state: MambaState) -> Tuple[jax.Array, MambaState]:
+    """Single-token step. x: (B, 1, d)."""
+    return mamba_apply_dense(cfg, p, x, state)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, d_in, s.d_state), jnp.float32),
+        conv=jnp.zeros((batch, s.d_conv - 1, d_in), dtype))
+
+
+# ======================================================================
+# RWKV6 (Finch): data-dependent decay time-mix + channel-mix
+class RWKVState(NamedTuple):
+    wkv: jax.Array        # (B, H, Dk, Dv) per-head state
+    shift_t: jax.Array    # (B, d) last token (time-mix shift)
+    shift_c: jax.Array    # (B, d) last token (channel-mix shift)
+
+
+_LORA = 64                # decay/mix lora rank
+
+
+def rwkv_param_specs(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h = cfg.ssm.wkv_head_dim
+    nh = d // h
+    return {
+        # token-shift interpolation weights (static part) for r,k,v,w,g
+        "mix": ParamSpec((5, d), (None, "d_model"), init="zeros"),
+        "w_r": ParamSpec((d, d), ("d_model", "heads_flat")),
+        "w_k": ParamSpec((d, d), ("d_model", "heads_flat")),
+        "w_v": ParamSpec((d, d), ("d_model", "heads_flat")),
+        "w_g": ParamSpec((d, d), ("d_model", "heads_flat")),
+        "w_o": ParamSpec((d, d), ("heads_flat", "d_model")),
+        # data-dependent decay lora: w = exp(-exp(w0 + tanh(x A) B))
+        "decay_w0": ParamSpec((d,), ("d_model",), init="zeros"),
+        "decay_a": ParamSpec((d, _LORA), ("d_model", None)),
+        "decay_b": ParamSpec((_LORA, d), (None, "d_model")),
+        "bonus_u": ParamSpec((nh, h), (None, None), init="zeros"),
+        "ln_scale": ParamSpec((d,), ("d_model",), init="ones"),
+        "ln_bias": ParamSpec((d,), ("d_model",), init="zeros"),
+        # channel mix
+        "cm_mix": ParamSpec((2, d), (None, "d_model"), init="zeros"),
+        "cm_k": ParamSpec((d, cfg.d_ff), ("d_model", "d_ff")),
+        "cm_v": ParamSpec((cfg.d_ff, d), ("d_ff", "d_model")),
+        "cm_r": ParamSpec((d, d), ("d_model", "d_model_out")),
+    }
+
+
+def _shift(x: jax.Array, carry: jax.Array) -> jax.Array:
+    """x_{t-1} sequence: carry is the token before x[:, 0]."""
+    return jnp.concatenate([carry[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: ParamTree, x: jax.Array,
+                  state: RWKVState, use_kernel: bool = False
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (out, new_wkv, new_shift). x: (B, S, d)."""
+    d = cfg.d_model
+    hd = cfg.ssm.wkv_head_dim
+    nh = d // hd
+    b, seq, _ = x.shape
+    prev = _shift(x, state.shift_t)
+    mix = p["mix"].astype(x.dtype)
+
+    def lerp(i):
+        return x + (prev - x) * mix[i]
+
+    xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
+    r = (xr @ p["w_r"].astype(x.dtype)).reshape(b, seq, nh, hd)
+    k = (xk @ p["w_k"].astype(x.dtype)).reshape(b, seq, nh, hd)
+    v = (xv @ p["w_v"].astype(x.dtype)).reshape(b, seq, nh, hd)
+    g = jax.nn.silu(xg @ p["w_g"].astype(x.dtype))
+    # data-dependent per-channel decay in (0,1)
+    ww = p["decay_w0"].astype(jnp.float32) + jnp.tanh(
+        xw.astype(jnp.float32) @ p["decay_a"].astype(jnp.float32)
+    ) @ p["decay_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, seq, nh, hd)           # (B,S,H,Dk)
+    u = p["bonus_u"].astype(jnp.float32)                        # (H, Dk)
+
+    if use_kernel and seq > 1:
+        from repro.kernels import ops as kops
+        fold = lambda t: t.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+            b * nh, seq, hd)
+        u_bh = jnp.broadcast_to(u[None], (b, nh, hd)).reshape(b * nh, hd)
+        y_bh, s_bh = kops.rwkv6_wkv(fold(r), fold(k), fold(v), fold(w), u_bh)
+        y = y_bh.reshape(b, nh, seq, hd).transpose(0, 2, 1, 3).reshape(
+            b, seq, d)
+        s_final = s_bh.reshape(b, nh, hd, hd)
+    else:
+        def step(s_wkv, inp):
+            r_t, k_t, v_t, w_t = inp                            # (B,H,D*) each
+            kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,Dk,Dv)
+            y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                           s_wkv + u[None, :, :, None] * kv)
+            s_wkv = w_t[..., None] * s_wkv + kv
+            return s_wkv, y
+
+        xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                   for t in (r, k, v, w))
+        s_final, ys = jax.lax.scan(step, state.wkv.astype(jnp.float32), xs)
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, seq, d)           # (B,S,d)
+    y = layer_norm(y, p["ln_scale"].astype(jnp.float32),
+                   p["ln_bias"].astype(jnp.float32), cfg.norm_eps)
+    out = (y.astype(x.dtype) * g) @ p["w_o"].astype(x.dtype)
+    return out, s_final, x[:, -1, :]
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: ParamTree, x: jax.Array,
+                     state: RWKVState) -> Tuple[jax.Array, jax.Array]:
+    prev = _shift(x, state.shift_c)
+    mix = p["cm_mix"].astype(x.dtype)
+    xk = x + (prev - x) * mix[0]
+    xr = x + (prev - x) * mix[1]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
+    out = jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype)) * (
+        k @ p["cm_v"].astype(x.dtype))
+    return out, x[:, -1, :]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> RWKVState:
+    d = cfg.d_model
+    hd = cfg.ssm.wkv_head_dim
+    nh = d // hd
+    return RWKVState(
+        wkv=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        shift_t=jnp.zeros((batch, d), dtype),
+        shift_c=jnp.zeros((batch, d), dtype))

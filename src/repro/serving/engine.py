@@ -1,0 +1,149 @@
+"""Serving engine: prefill -> padded decode caches -> batched decode loop.
+
+The engine owns the jit'd prefill/decode executables for one model variant
+on one worker group (mesh). The paper's Local Node "Inference" state calls
+into this; the Gateway's dispatcher decides which variant each group loads.
+
+Cache layout notes:
+  * prefill returns raw seq-length caches; ``pad_caches`` places them into
+    max_len decode buffers. For sliding-window layers the cache is a ring
+    buffer keyed by absolute position (slot = pos % window), so the last
+    `window` tokens are rolled so that slot (pos % window) holds position
+    pos — see tests/test_serving.py for the invariant check.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import model as model_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+
+
+def _pad_kv(raw: attn_lib.KVCache, max_len: int, seq_len: int,
+            window: Optional[int]) -> attn_lib.KVCache:
+    """raw.k: (L, B, S, KV, D) stacked per group-unit. Returns decode cache."""
+    def pad_one(x):
+        if window is None:
+            target = max_len
+            pad = target - x.shape[2]
+            out = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            return out
+        w = min(window, max_len)
+        # ring buffer: slot = pos % w must hold position pos
+        if x.shape[2] >= w:
+            last = x[:, :, -w:]                      # positions S-w .. S-1
+            shift = seq_len % w
+            return jnp.roll(last, shift=shift, axis=2)
+        pad = w - x.shape[2]
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return attn_lib.KVCache(k=pad_one(raw.k), v=pad_one(raw.v))
+
+
+def pad_caches(cfg: ModelConfig, raw_caches, seq_len: int, max_len: int):
+    """Convert prefill caches (raw length) to decode caches (max_len)."""
+    assert max_len >= seq_len, (
+        f"decode max_len={max_len} shorter than prefill length {seq_len} "
+        "(stub-frontend archs prepend stub_embed_len positions)")
+    out = {}
+    for g in tfm.layer_plan(cfg):
+        unit_out = {}
+        for i, sl in enumerate(g.pattern):
+            c = raw_caches[g.name][f"sub{i}"]
+            if sl.mixer == "gqa":
+                window = None
+                if cfg.attention_kind == "sliding" or (
+                        cfg.attention_kind == "local_global"
+                        and not sl.is_global):
+                    window = cfg.sliding_window
+                unit_out[f"sub{i}"] = _pad_kv(c, max_len, seq_len, window)
+            elif sl.mixer == "mla":
+                pad = max_len - c.latent.shape[2]
+                unit_out[f"sub{i}"] = attn_lib.MLACache(
+                    latent=jnp.pad(c.latent, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                    k_rope=jnp.pad(c.k_rope, ((0, 0), (0, 0), (0, pad), (0, 0))))
+            else:   # mamba / rwkv states are fixed-size
+                unit_out[f"sub{i}"] = c
+        out[g.name] = unit_out
+    return out
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_len: int = 512
+    use_kernels: bool = False
+    donate_cache: bool = True
+
+
+class Engine:
+    """One model variant, jit'd, on the current default mesh/devices."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self._prefill = jax.jit(functools.partial(
+            model_lib.prefill, cfg, use_kernels=ecfg.use_kernels))
+        self._decode = jax.jit(
+            functools.partial(model_lib.decode_step, cfg,
+                              use_kernels=ecfg.use_kernels),
+            donate_argnums=(1,) if ecfg.donate_cache else ())
+
+    def prefill(self, tokens: jax.Array, embeds: Optional[jax.Array] = None):
+        logits, raw = self._prefill(self.params, tokens, embeds)
+        seq_len = tokens.shape[1] + (embeds.shape[1] if embeds is not None else 0)
+        caches = pad_caches(self.cfg, raw, seq_len, self.ecfg.max_len)
+        lengths = jnp.full((tokens.shape[0],), seq_len, jnp.int32)
+        return logits, caches, lengths
+
+    def decode(self, caches, lengths, tokens):
+        return self._decode(self.params, caches, lengths, tokens)
+
+    def generate(self, tokens: jax.Array, num_steps: int,
+                 embeds: Optional[jax.Array] = None,
+                 sample_rng: Optional[jax.Array] = None) -> np.ndarray:
+        """Greedy (or sampled) generation; returns (B, num_steps) tokens."""
+        logits, caches, lengths = self.prefill(tokens, embeds)
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(num_steps):
+            out.append(np.asarray(tok))
+            logits, caches, lengths = self.decode(caches, lengths, tok)
+            if sample_rng is not None:
+                sample_rng, sub = jax.random.split(sample_rng)
+                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+            else:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return np.stack(out, axis=1)
+
+
+class BatchScheduler:
+    """Static-batch scheduler: groups same-length requests into engine
+    batches (the GN dispatcher decides the split across groups; this packs
+    each group's share)."""
+
+    def __init__(self, batch_size: int):
+        self.batch_size = batch_size
+        self.queue: List[np.ndarray] = []
+
+    def add(self, prompt: np.ndarray):
+        self.queue.append(prompt)
+
+    def next_batch(self) -> Optional[np.ndarray]:
+        if not self.queue:
+            return None
+        n = min(self.batch_size, len(self.queue))
+        batch, self.queue = self.queue[:n], self.queue[n:]
+        max_l = max(len(p) for p in batch)
+        out = np.zeros((n, max_l), dtype=np.int32)
+        for i, p in enumerate(batch):
+            out[i, -len(p):] = p      # left-pad
+        return out

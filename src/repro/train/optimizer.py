@@ -1,0 +1,97 @@
+"""AdamW + LR schedule + global-norm clipping, pure JAX (no optax here).
+
+Moments can be kept in bf16 (``moment_dtype``) — at 671B-scale the optimizer
+state is the HBM bottleneck (see EXPERIMENTS.md §Dry-run), and bf16 moments
+halve it; the update math stays fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "bfloat16"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(cfg: OptimizerConfig, params) -> OptState:
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree_util.tree_map(zeros, params),
+                    nu=jax.tree_util.tree_map(zeros, params))
+
+
+def abstract_opt_state(cfg: OptimizerConfig, abstract_params) -> OptState:
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, mdt)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    mu=jax.tree_util.tree_map(zeros, abstract_params),
+                    nu=jax.tree_util.tree_map(zeros, abstract_params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state: OptState
+                  ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms
+        new_p = p.astype(jnp.float32) * (1 - lr * decay) - lr * delta
+        return new_p.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(state.mu)
+    flat_nu = jax.tree_util.tree_leaves(state.nu)
+    new = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [a for a, _, _ in new])
+    new_mu = jax.tree_util.tree_unflatten(tdef, [b for _, b, _ in new])
+    new_nu = jax.tree_util.tree_unflatten(tdef, [c for _, _, c in new])
+    return new_p, OptState(step, new_mu, new_nu), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,83 @@
+"""Training step: loss -> grads -> AdamW update, with remat and optional
+microbatch gradient accumulation (for memory-bound cells)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: opt_lib.OptimizerConfig = opt_lib.OptimizerConfig()
+    remat: bool = True
+    microbatches: int = 1           # grad accumulation
+    use_kernels: bool = False
+    unroll: int = 1                 # scan unroll (dry-run roofline uses full)
+    remat_policy: str = "nothing"   # "nothing" | "save_attn"
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: opt_lib.OptState
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, rng) -> TrainState:
+    params = model_lib.init_params(cfg, rng)
+    return TrainState(params=params, opt=opt_lib.init_opt_state(tcfg.opt, params))
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    params = model_lib.abstract_params(cfg)
+    return TrainState(params=params,
+                      opt=opt_lib.abstract_opt_state(tcfg.opt, params))
+
+
+def _split_micro(batch: Dict[str, jax.Array], n: int, i: int):
+    def sl(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return {k: sl(v) for k, v in batch.items()}
+
+
+def train_step(cfg: ModelConfig, tcfg: TrainConfig, state: TrainState,
+               batch: Dict[str, jax.Array]) -> Tuple[TrainState, Dict]:
+    loss_of = functools.partial(model_lib.loss_fn, cfg,
+                                use_kernels=tcfg.use_kernels, remat=tcfg.remat,
+                                unroll=tcfg.unroll,
+                                remat_policy=tcfg.remat_policy)
+
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(state.params, batch)
+    else:
+        n = tcfg.microbatches
+
+        def acc_step(carry, i):
+            g_acc, l_acc = carry
+            (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                state.params, _split_micro(batch, n, i))
+            g_acc = jax.tree_util.tree_map(lambda a, b: a + b, g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+        (grads, loss), _ = jax.lax.scan(
+            acc_step, (zeros, jnp.float32(0.0)), jnp.arange(n))
+        grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+        loss = loss / n
+        metrics = {}
+
+    new_params, new_opt, opt_metrics = opt_lib.apply_updates(
+        tcfg.opt, state.params, grads, state.opt)
+    out = {"loss": loss, **opt_metrics}
+    for k, v in (metrics or {}).items():
+        out[k] = v
+    return TrainState(new_params, new_opt), out

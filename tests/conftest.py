@@ -1,0 +1,17 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device;
+# only launch/dryrun.py forces 512 placeholder devices (in its own process).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_finite(tree, name=""):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        assert np.isfinite(arr).all(), f"non-finite values at {name}{path}"

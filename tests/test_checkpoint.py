@@ -1,0 +1,54 @@
+"""Checkpoint roundtrip + fault-tolerant restart resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import run_training
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts
+
+
+def test_roundtrip(tmp_path, rng):
+    cfg = get_smoke_config("qwen3-32b")
+    tcfg = ts.TrainConfig()
+    state = ts.init_train_state(cfg, tcfg, rng)
+    ckpt.save(str(tmp_path), 7, state)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    abstract = ts.abstract_train_state(cfg, tcfg)
+    restored = ckpt.restore(str(tmp_path), 7, abstract)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gc_keeps_last(tmp_path, rng):
+    cfg = get_smoke_config("qwen3-32b")
+    tcfg = ts.TrainConfig()
+    state = ts.init_train_state(cfg, tcfg, rng)
+    for step in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), step, state, keep=2)
+    files = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert files == ["step_00000004.npz", "step_00000005.npz"]
+
+
+def test_restart_resumes_identically(tmp_path):
+    """Fault-tolerance: crash after step 6 of 12, restart from the
+    checkpoint -> identical final loss as an uninterrupted run (exactly —
+    data pipeline is seekable, optimizer state restored)."""
+    cfg = get_smoke_config("phi4-mini-3.8b")
+    mesh = make_local_mesh()
+    kw = dict(steps=12, global_batch=4, seq_len=32, ckpt_every=6,
+              verbose=False, remat=False)
+    full = run_training(cfg, mesh, ckpt_dir=None, **kw)
+
+    d = str(tmp_path / "ck")
+    kw6 = dict(kw, steps=6)
+    run_training(cfg, mesh, ckpt_dir=d, **kw6)            # "crash" at 6
+    assert ckpt.latest_step(d) == 6
+    resumed = run_training(cfg, mesh, ckpt_dir=d, **kw)   # restart
+    np.testing.assert_allclose(full[-1], resumed[-1], rtol=1e-5)

@@ -1,0 +1,173 @@
+"""Dispatch Policy tests: Algorithm 1 semantics + the paper's comparison
+scenarios (Fig. 2 strategy comparison, Fig. 9 availability)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import DEFAULT_NODES, SimBackend
+from repro.core.dispatch import (POLICIES, asymmetric, exact_oracle,
+                                 proportional, uniform, uniform_apx)
+from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.requests import InferenceRequest
+from repro.core.resource_manager import Event, GatewayNode, GNState
+from repro.core.variants import VariantPool
+
+
+@pytest.fixture(scope="module")
+def table():
+    cfg = get_config("phi4-mini-3.8b")
+    pool = VariantPool(cfg)
+    nodes = [NodeProfile(n.name, n.chips, n.capability)
+             for n in DEFAULT_NODES]
+    return ProfilingTable(pool, nodes, seq_len=512)
+
+
+def _req(table, perf_frac, acc=86.0, items=520):
+    """perf_frac: fraction of the span [full-acc capacity, max-apx capacity]."""
+    lo, hi = table.perf[0].sum(), table.perf[-1].sum()
+    return InferenceRequest(rid=0, num_items=items,
+                            perf_req=lo + perf_frac * (hi - lo), acc_req=acc)
+
+
+def test_table_monotone(table):
+    """Throughput grows with approximation; accuracy decreases."""
+    assert (np.diff(table.perf, axis=0) > 0).all()
+    assert (np.diff(table.accuracies) <= 0).all()
+
+
+def test_items_conserved(table):
+    req = _req(table, 0.5)
+    for name, pol in POLICIES.items():
+        d = pol(table, req)
+        assert d.total_items == req.num_items, name
+
+
+def test_proportional_meets_perf_with_min_apx(table):
+    backend = SimBackend(table)
+    req = _req(table, 0.4)
+    d = proportional(table, req)
+    r = backend.execute(d)
+    assert r.meets_perf
+    # uniform (no apx) must fail this demanding request
+    r_uni = backend.execute(uniform(table, req))
+    assert not r_uni.meets_perf
+    # and proportional must be more accurate than uniform+apx
+    r_apx = backend.execute(uniform_apx(table, req))
+    assert r.achieved_acc >= r_apx.achieved_acc - 1e-9
+
+
+def test_asymmetric_matches_capability_shares(table):
+    req = _req(table, 0.0, items=1000)
+    d = asymmetric(table, req)
+    caps = table.perf[0]
+    shares = caps / caps.sum()
+    for a, s in zip(d.assignments, shares):
+        assert a.apx_level == 0
+        assert abs(a.items - req.num_items * s) <= 1 + req.num_items * 0.01
+
+
+def test_feasible_at_full_accuracy_means_no_apx(table):
+    # comfortably below full-accuracy capacity (the dispatcher adds a
+    # small quantisation margin on top of perf_req)
+    req = _req(table, -0.08)
+    d = proportional(table, req)
+    assert all(a.apx_level == 0 for a in d.assignments)
+
+
+def test_infeasible_best_effort_max_apx(table):
+    req = InferenceRequest(rid=0, num_items=100,
+                           perf_req=table.perf[-1].sum() * 10, acc_req=80.0)
+    d = proportional(table, req)
+    assert all(a.apx_level == table.num_levels - 1 for a in d.assignments)
+
+
+def test_oracle_dominates_heuristic_accuracy(table):
+    """The exact oracle never yields lower accuracy at met-perf than the
+    paper heuristic (it measures Algorithm 1's optimality gap)."""
+    backend = SimBackend(table)
+    for frac in (0.1, 0.3, 0.5, 0.7, 0.9):
+        req = _req(table, frac)
+        r_prop = backend.execute(proportional(table, req))
+        r_orac = backend.execute(exact_oracle(table, req))
+        if r_prop.meets_perf and r_orac.meets_perf:
+            assert r_orac.achieved_acc >= r_prop.achieved_acc - 0.25
+
+
+def test_disconnect_redistribution(table):
+    """Paper Fig. 9: progressively disconnect nodes; the policy keeps
+    dispatching over survivors."""
+    backend = SimBackend(table)
+    gn = GatewayNode(table, backend, policy="proportional")
+    gn.startup()
+    req = _req(table, 0.2)
+    r_all = gn.handle(Event(kind="workload", request=req))
+    assert r_all.meets_perf
+
+    gn.handle(Event(kind="disconnect", node="slice-d"))
+    r3 = gn.handle(Event(kind="workload", request=req))
+    d3 = gn.dispatches[-1]
+    assert all(a.node != "slice-d" for a in d3.assignments)
+    # survivors approximate more (or equal) to compensate
+    mean_lvl_before = np.mean([a.apx_level for a in gn.dispatches[0].assignments])
+    mean_lvl_after = np.mean([a.apx_level for a in d3.assignments])
+    assert mean_lvl_after >= mean_lvl_before
+
+    gn.handle(Event(kind="reconnect", node="slice-d"))
+    r4 = gn.handle(Event(kind="workload", request=req))
+    assert any(a.node == "slice-d" for a in gn.dispatches[-1].assignments)
+
+
+def test_fsm_transition_sequence(table):
+    backend = SimBackend(table)
+    gn = GatewayNode(table, backend)
+    gn.startup()
+    gn.handle(Event(kind="workload", request=_req(table, 0.2)))
+    assert [s.value for s in gn.log] == [
+        "profile", "netcom", "distribute", "netcom", "inference", "netcom"]
+    ln = next(iter(gn.locals.values()))
+    assert [s.value for s in ln.log[:3]] == ["profile", "netcom", "wait"]
+
+
+def test_straggler_feedback(table):
+    """Beyond-paper: a straggling node's profiled perf decays, shifting
+    load away from it on the next dispatch."""
+    backend = SimBackend(table)
+    gn = GatewayNode(table, backend, policy="proportional")
+    gn.startup()
+    req = _req(table, 0.3)
+    gn.handle(Event(kind="straggler", node="slice-a", slowdown=0.5))
+    d1 = None
+    share_before = None
+    gn.handle(Event(kind="workload", request=req))
+    share_before = [a.items for a in gn.dispatches[-1].assignments
+                    if a.node == "slice-a"][0]
+    gn.handle(Event(kind="workload", request=req))
+    share_after = [a.items for a in gn.dispatches[-1].assignments
+                   if a.node == "slice-a"][0]
+    assert share_after < share_before
+
+
+def test_paper_fig2_strategy_ordering(table):
+    """The qualitative result of paper Fig. 2: only the proportional policy
+    meets perf AND accuracy; uniform+apx violates accuracy; uniform and
+    asymmetric violate performance."""
+    backend = SimBackend(table)
+    # perf target feasible for uniform_apx (each node's share under its
+    # max-apx throughput) but infeasible without approximation
+    per_node_cap = table.perf[-1].min() * table.num_nodes
+    lo = table.perf[0].sum()
+    perf_req = min(0.97 * per_node_cap, lo + 0.5 * (table.perf[-1].sum() - lo))
+    assert perf_req > lo
+    acc_req = 89.0
+    req = InferenceRequest(rid=0, num_items=650, perf_req=perf_req,
+                           acc_req=acc_req)
+
+    res = {name: backend.execute(pol(table, req))
+           for name, pol in POLICIES.items()}
+    assert not res["uniform"].meets_perf
+    assert res["uniform"].meets_acc
+    assert not res["asymmetric"].meets_perf
+    assert res["asymmetric"].meets_acc
+    assert res["uniform_apx"].meets_perf
+    assert res["proportional"].meets_perf
+    assert res["proportional"].achieved_acc > res["uniform_apx"].achieved_acc

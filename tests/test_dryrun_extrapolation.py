@@ -1,0 +1,38 @@
+"""Integration test: the dry-run's 2-point depth extrapolation must agree
+with the direct full-unroll lowering. Runs in a subprocess because the
+dry-run forces 512 placeholder devices (jax locks device count on first
+init and the rest of the suite needs 1 CPU device)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+
+SCRIPT = r"""
+import os, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+out = {}
+for method in ("extrapolate", "direct"):
+    r = run_cell("gemma2-2b", "decode_32k", method=method, verbose=False)
+    out[method] = {k: r[k] for k in
+                   ("flops_per_dev", "hbm_bytes_per_dev",
+                    "collective_wire_bytes")}
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_extrapolation_matches_direct():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        timeout=900, env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    e, d = out["extrapolate"], out["direct"]
+    for k in e:
+        if d[k] == 0:
+            assert e[k] == 0, k
+        else:
+            assert abs(e[k] - d[k]) / d[k] < 0.02, (k, e[k], d[k])

@@ -1,0 +1,19 @@
+"""Elastic re-scale integration: training survives a mesh-shape change
+(the training-side analogue of the paper's disconnect -> re-Distribute).
+Subprocess because it forces an 8-device CPU topology."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_elastic_restart_example():
+    proc = subprocess.run(
+        [sys.executable, "examples/elastic_restart.py"],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "elastic restart OK" in proc.stdout
+    assert "restored checkpoint at step 6" in proc.stdout

@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dispatch import POLICIES, proportional
+from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.requests import InferenceRequest
+from repro.core.variants import VariantPool, accuracy_proxy
+from repro.configs import get_config
+
+
+def _make_table(caps, seed=0):
+    """Build a ProfilingTable from raw capability numbers via the measured
+    path (levels x nodes, monotone rows)."""
+    cfg = get_config("phi4-mini-3.8b")
+    pool = VariantPool(cfg)
+    m = len(pool)
+    caps = np.asarray(caps, dtype=np.float64)
+    # level speedups mirror the variant ladder (monotone increasing)
+    speed = np.linspace(1.0, 2.1, m)[:, None]
+    perf = caps[None, :] * speed
+    nodes = [NodeProfile(f"n{i}", chips=1) for i in range(len(caps))]
+    return ProfilingTable(pool, nodes, measured=perf)
+
+
+caps_strategy = st.lists(
+    st.floats(min_value=10.0, max_value=5000.0, allow_nan=False),
+    min_size=2, max_size=6)
+
+
+@given(caps=caps_strategy,
+       frac=st.floats(min_value=0.0, max_value=1.2),
+       items=st.integers(min_value=1, max_value=5000))
+@settings(max_examples=150, deadline=None)
+def test_dispatch_invariants(caps, frac, items):
+    table = _make_table(caps)
+    lo, hi = table.perf[0].sum(), table.perf[-1].sum()
+    req = InferenceRequest(rid=0, num_items=items,
+                           perf_req=lo + frac * (hi - lo), acc_req=85.0)
+    for name, pol in POLICIES.items():
+        d = pol(table, req)
+        # 1. workload conservation
+        assert d.total_items == items, name
+        # 2. levels within ladder bounds
+        assert all(0 <= a.apx_level < table.num_levels
+                   for a in d.assignments), name
+        # 3. no negative shares
+        assert all(a.items >= 0 for a in d.assignments), name
+
+
+@given(caps=caps_strategy, frac=st.floats(min_value=0.0, max_value=0.98))
+@settings(max_examples=100, deadline=None)
+def test_proportional_feasible_requests_are_met(caps, frac):
+    """Whenever perf_req is within max-apx cluster capacity (with the
+    dispatch margin), the paper policy's allocation meets it on paper."""
+    table = _make_table(caps)
+    lo, hi = table.perf[0].sum(), table.perf[-1].sum()
+    req = InferenceRequest(rid=0, num_items=1000,
+                           perf_req=(lo + frac * (hi - lo)) / 1.03,
+                           acc_req=0.0)
+    d = proportional(table, req)
+    alloc = sum(a.perf_alloc for a in d.assignments)
+    assert alloc >= req.perf_req * 0.999
+
+
+@given(caps=caps_strategy, frac=st.floats(min_value=0.0, max_value=1.0),
+       drop=st.integers(min_value=0, max_value=5))
+@settings(max_examples=100, deadline=None)
+def test_unavailable_nodes_never_assigned(caps, frac, drop):
+    table = _make_table(caps)
+    drop = drop % len(caps)
+    table.nodes[drop].available = False
+    lo, hi = table.perf[0].sum(), table.perf[-1].sum()
+    req = InferenceRequest(rid=0, num_items=500,
+                           perf_req=lo + frac * (hi - lo), acc_req=85.0)
+    for name, pol in POLICIES.items():
+        d = pol(table, req)
+        assert all(a.node != f"n{drop}" for a in d.assignments), name
+        assert d.total_items == 500, name
+
+
+@given(rel=st.floats(min_value=0.05, max_value=1.0))
+@settings(max_examples=50, deadline=None)
+def test_accuracy_proxy_bounded_monotone(rel):
+    acc = accuracy_proxy(rel)
+    assert 82.9 - 1e-9 <= acc <= 92.5 + 1e-9
+    # monotone: smaller model never scores higher
+    assert accuracy_proxy(min(rel * 1.1, 1.0)) >= acc - 1e-9
+
+
+@given(st.integers(min_value=1, max_value=2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_data_pipeline_deterministic_seekable(step):
+    from repro.data.pipeline import DataConfig, SyntheticTokens
+    cfg = DataConfig(vocab_size=97, seq_len=17, global_batch=3, seed=7)
+    a = SyntheticTokens(cfg).batch(step)["tokens"]
+    b = SyntheticTokens(cfg).batch(step)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (3, 17)
+    assert (a >= 0).all() and (a < 97).all()
