@@ -1,0 +1,121 @@
+"""Online serving benchmark: sweep dispatch policies across simulator
+scenarios and report per-policy latency / deadline / accuracy metrics —
+the paper's Table/Fig comparisons, now under sustained load.
+
+Run:
+  PYTHONPATH=src python benchmarks/run_sim.py \
+      --scenario steady --policies uniform,proportional
+  PYTHONPATH=src python benchmarks/run_sim.py --scenario all --verbose
+
+Output: one CSV-ish row per (scenario, policy) with
+p50/p99 latency, deadline-violation rate, mean accuracy, mean queue wait,
+and the number of disconnect-triggered re-DISTRIBUTEs. ``--verbose``
+additionally prints the simulator event log (disconnects, re-DISTRIBUTEs,
+stragglers) for fault scenarios.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+try:
+    import repro  # noqa: F401
+except ModuleNotFoundError:     # run from a checkout without PYTHONPATH=src
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
+
+from repro.configs import get_config
+from repro.core.cluster import DEFAULT_NODES, SimBackend
+from repro.core.dispatch import POLICIES
+from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.resource_manager import GatewayNode
+from repro.core.variants import VariantPool
+from repro.sim import SCENARIOS, OnlineSimulator, build_scenario
+
+ARCH = "phi4-mini-3.8b"
+
+
+def _fresh_table(seq_len: int = 512) -> ProfilingTable:
+    """Each (scenario, policy) run gets its own table: the GN mutates it
+    (straggler EWMA decay, availability), so sharing would leak state."""
+    pool = VariantPool(get_config(ARCH))
+    nodes = [NodeProfile(n.name, n.chips, n.capability)
+             for n in DEFAULT_NODES]
+    return ProfilingTable(pool, nodes, seq_len=seq_len)
+
+
+def run_one(scenario_name: str, policy: str, *, seed: int,
+            horizon_s: float, noise_std: float, verbose: bool) -> dict:
+    table = _fresh_table()
+    sc = build_scenario(scenario_name, table, seed=seed,
+                        horizon_s=horizon_s)
+    gn = GatewayNode(table, SimBackend(table, noise_std=noise_std,
+                                       seed=seed), policy=policy)
+    sim = OnlineSimulator(gn, sc.arrivals, sc.faults,
+                          scenario=sc.name, horizon_s=sc.horizon_s)
+    report = sim.run()
+    if verbose:
+        for line in report.log:
+            if any(k in line for k in
+                   ("disconnect", "re-DISTRIBUTE", "reconnect",
+                    "straggler", "parked")):
+                print(f"    [{policy}] {line}", file=sys.stderr)
+    return report.summary()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", default="steady",
+                    help=f"one of {sorted(SCENARIOS)} or 'all'")
+    ap.add_argument("--policies", default=",".join(POLICIES),
+                    help="comma-separated subset of "
+                         f"{sorted(POLICIES)}")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--horizon", type=float, default=30.0,
+                    help="arrival horizon in sim-seconds")
+    ap.add_argument("--noise", type=float, default=0.0,
+                    help="execution-time noise std (SimBackend)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print fault/re-DISTRIBUTE log lines to stderr")
+    args = ap.parse_args(argv)
+
+    scenario_names = (sorted(SCENARIOS) if args.scenario == "all"
+                      else [args.scenario])
+    for s in scenario_names:
+        if s not in SCENARIOS:
+            ap.error(f"unknown scenario {s!r}; have {sorted(SCENARIOS)} "
+                     "or 'all'")
+    policies = [p.strip() for p in args.policies.split(",") if p.strip()]
+    if not policies:
+        ap.error("--policies must name at least one policy "
+                 f"from {sorted(POLICIES)}")
+    for p in policies:
+        if p not in POLICIES:
+            ap.error(f"unknown policy {p!r}; have {sorted(POLICIES)}")
+    if args.horizon <= 0:
+        ap.error("--horizon must be > 0 sim-seconds")
+
+    cols = ("scenario", "policy", "offered", "completed", "p50_latency_s",
+            "p99_latency_s", "deadline_violation_rate", "mean_acc",
+            "mean_queue_wait_s", "redistributes")
+    print(",".join(cols))
+    for sname in scenario_names:
+        for policy in policies:
+            s = run_one(sname, policy, seed=args.seed,
+                        horizon_s=args.horizon, noise_std=args.noise,
+                        verbose=args.verbose)
+            print(",".join([
+                sname, policy,
+                f"{s['offered']:.0f}", f"{s['completed']:.0f}",
+                f"{s['p50_latency_s']:.4f}", f"{s['p99_latency_s']:.4f}",
+                f"{s['deadline_violation_rate']:.3f}",
+                f"{s['mean_acc']:.2f}",
+                f"{s['mean_queue_wait_s']:.4f}",
+                f"{s['redistributes']:.0f}",
+            ]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,6 +51,9 @@ class SimBackend:
         self.noise_std = noise_std
         self.rng = np.random.default_rng(seed)
         self.stragglers: Dict[str, float] = {}
+        # node membership/order is fixed for a table's lifetime (only perf
+        # values and availability mutate), so the index map is cacheable
+        self._node_idx = {n.name: j for j, n in enumerate(table.nodes)}
 
     def set_straggler(self, node: str, slowdown: float):
         self.stragglers[node] = slowdown
@@ -58,27 +61,49 @@ class SimBackend:
     def clear_stragglers(self):
         self.stragglers.clear()
 
-    def execute(self, d: Dispatch) -> ExecutionResult:
-        names = [n.name for n in self.table.nodes]
+    def assignment_time(self, a: "Assignment") -> float:
+        """Service time of one node's share (straggler + noise applied).
+
+        The online simulator schedules each share onto its node's FIFO
+        queue with this duration; ``execute`` below is the timeless
+        all-nodes-start-together path built from the same quantity.
+        """
+        j = self._node_idx[a.node]
+        perf = self.table.perf[a.apx_level, j]
+        perf *= self.stragglers.get(a.node, 1.0)
+        if self.noise_std > 0:
+            perf *= max(0.05, 1.0 + self.rng.normal(0, self.noise_std))
+        return a.items / max(perf, 1e-9)
+
+    def dispatch_accuracy(self, d: Dispatch) -> float:
+        """Workload-weighted accuracy of a dispatch (table proxy)."""
+        total = sum(a.items for a in d.assignments)
+        acc = sum(a.items * self.table.accuracies[a.apx_level]
+                  for a in d.assignments)
+        return acc / max(total, 1)
+
+    def execute(self, d: Dispatch, *, now: float = 0.0) -> ExecutionResult:
+        """Run all shares starting together at sim-time ``now``.
+
+        ``now`` defaults to the request's own arrival so the offline path
+        stays timeless (queue_wait_s == 0, latency_s == makespan_s).
+        """
         per_node_time: Dict[str, float] = {}
-        acc_weighted = 0.0
         for a in d.assignments:
             if a.items == 0:
                 continue
-            j = names.index(a.node)
-            perf = self.table.perf[a.apx_level, j]
-            perf *= self.stragglers.get(a.node, 1.0)
-            if self.noise_std > 0:
-                perf *= max(0.05, 1.0 + self.rng.normal(0, self.noise_std))
-            per_node_time[a.node] = a.items / max(perf, 1e-9)
-            acc_weighted += a.items * self.table.accuracies[a.apx_level]
+            per_node_time[a.node] = self.assignment_time(a)
         makespan = max(per_node_time.values()) if per_node_time else 0.0
         total = sum(a.items for a in d.assignments)
+        start = max(now, d.request.arrival_s)
         return ExecutionResult(
             request=d.request, policy=d.policy,
             achieved_perf=total / makespan if makespan > 0 else 0.0,
-            achieved_acc=acc_weighted / max(total, 1),
-            makespan_s=makespan, per_node_time=per_node_time)
+            achieved_acc=self.dispatch_accuracy(d),
+            makespan_s=makespan, per_node_time=per_node_time,
+            arrival_s=d.request.arrival_s, start_s=start,
+            finish_s=start + makespan,
+            queue_wait_s=max(0.0, start - d.request.arrival_s))
 
 
 def partition_pod(mesh_shape: Tuple[int, int] = (16, 16),

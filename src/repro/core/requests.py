@@ -18,6 +18,18 @@ class InferenceRequest:
     perf_req: float             # required throughput, items/s
     acc_req: float              # required output accuracy, %
     seq_len: int = 128          # per-item sequence length (LM serving)
+    arrival_s: float = 0.0      # sim-clock arrival time (online serving)
+    deadline_s: float = 0.0     # latency budget from arrival; 0 => derive
+
+    @property
+    def latency_budget_s(self) -> float:
+        """Deadline budget: explicit ``deadline_s`` or the service time the
+        request's own perf_req implies (num_items / perf_req)."""
+        if self.deadline_s > 0:
+            return self.deadline_s
+        if self.perf_req > 0:
+            return self.num_items / self.perf_req
+        return float("inf")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,13 +54,33 @@ class Dispatch:
 
 @dataclasses.dataclass
 class ExecutionResult:
-    """Achieved performance/accuracy of one executed dispatch."""
+    """Achieved performance/accuracy of one executed dispatch.
+
+    Timing fields are on the simulator clock; in the timeless (offline)
+    path they default to a dispatch at t=0, so ``latency_s == makespan_s``
+    and ``queue_wait_s == 0``.
+    """
     request: InferenceRequest
     policy: str
     achieved_perf: float        # items/s (R / makespan)
     achieved_acc: float         # workload-weighted accuracy %
     makespan_s: float
-    per_node_time: Dict[str, float]
+    per_node_time: Dict[str, float]   # pure service time per node
+    arrival_s: float = 0.0      # request arrival on the sim clock
+    start_s: float = 0.0        # dispatch (DISTRIBUTE) time
+    finish_s: float = 0.0       # last share completion; 0 => start+makespan
+    queue_wait_s: float = 0.0   # max per-node wait between dispatch and start
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end latency: arrival -> last share completion."""
+        finish = self.finish_s if self.finish_s > 0 else (
+            self.start_s + self.makespan_s)
+        return finish - self.arrival_s
+
+    @property
+    def meets_deadline(self) -> bool:
+        return self.latency_s <= self.request.latency_budget_s + 1e-9
 
     @property
     def perf_violation(self) -> float:
@@ -70,8 +102,17 @@ class ExecutionResult:
         return self.achieved_acc >= self.request.acc_req - 1e-9
 
 
+def _percentile(sorted_xs: List[float], q: float) -> float:
+    """Nearest-rank percentile on a pre-sorted list (no numpy dependency)."""
+    if not sorted_xs:
+        return 0.0
+    k = min(len(sorted_xs) - 1, max(0, int(round(q * (len(sorted_xs) - 1)))))
+    return sorted_xs[k]
+
+
 def violation_summary(results: Sequence[ExecutionResult]) -> Dict[str, float]:
     n = max(len(results), 1)
+    lat = sorted(r.latency_s for r in results)
     return {
         "perf_violation_rate": sum(not r.meets_perf for r in results) / n,
         "acc_violation_rate": sum(not r.meets_acc for r in results) / n,
@@ -79,4 +120,9 @@ def violation_summary(results: Sequence[ExecutionResult]) -> Dict[str, float]:
         "mean_acc_violation": sum(r.acc_violation for r in results) / n,
         "mean_perf": sum(r.achieved_perf for r in results) / n,
         "mean_acc": sum(r.achieved_acc for r in results) / n,
+        "deadline_violation_rate":
+            sum(not r.meets_deadline for r in results) / n,
+        "p50_latency_s": _percentile(lat, 0.50),
+        "p99_latency_s": _percentile(lat, 0.99),
+        "mean_queue_wait_s": sum(r.queue_wait_s for r in results) / n,
     }

@@ -47,6 +47,7 @@ class Event:
     request: Optional[InferenceRequest] = None
     node: Optional[str] = None
     slowdown: float = 1.0
+    time: float = 0.0         # sim-clock timestamp (0 = timeless/offline)
 
 
 class LocalNode:
@@ -121,7 +122,7 @@ class GatewayNode:
     def handle(self, ev: Event) -> Optional[ExecutionResult]:
         assert self._profiled, "startup() first"
         if ev.kind == "workload":
-            return self._handle_workload(ev.request)
+            return self._handle_workload(ev.request, now=ev.time)
         if ev.kind == "disconnect":
             self._set_available(ev.node, False)
             # Fig. 4: disconnection triggers re-Distribute of the current
@@ -141,15 +142,24 @@ class GatewayNode:
             if n.name == node:
                 n.available = avail
 
-    def _handle_workload(self, request: InferenceRequest) -> ExecutionResult:
-        # NETCOM -> DISTRIBUTE (dispatch policy) -> NETCOM (broadcast)
+    def plan(self, request: InferenceRequest) -> Dispatch:
+        """NETCOM -> DISTRIBUTE -> NETCOM (broadcast): run the dispatch
+        policy over the currently-available nodes WITHOUT executing.
+
+        The online simulator calls this at a request's dispatch time,
+        schedules the shares onto per-node work queues itself, and reports
+        the timed outcome back through :meth:`complete`.
+        """
         self._to(GNState.DISTRIBUTE)
         d = dispatch_lib.dispatch(self.policy, self.table, request)
         self.dispatches.append(d)
         self._to(GNState.NETCOM)
-        # INFERENCE: LNs execute their shares
+        return d
+
+    def complete(self, d: Dispatch, result: ExecutionResult) -> ExecutionResult:
+        """INFERENCE -> NETCOM: record an executed dispatch's outcome,
+        drive the LN FSMs, and apply straggler feedback."""
         self._to(GNState.INFERENCE)
-        result = self.backend.execute(d)
         for a in d.assignments:
             if a.items > 0:
                 ln = self.locals[a.node]
@@ -161,10 +171,19 @@ class GatewayNode:
         self.results.append(result)
         return result
 
-    def redistribute(self, request: InferenceRequest) -> ExecutionResult:
+    def _handle_workload(self, request: InferenceRequest,
+                         now: float = 0.0) -> ExecutionResult:
+        """Synchronous (timeless) path: plan + execute-all-at-once +
+        complete. ``now`` stamps the dispatch on the sim clock."""
+        d = self.plan(request)
+        result = self.backend.execute(d, now=max(now, request.arrival_s))
+        return self.complete(d, result)
+
+    def redistribute(self, request: InferenceRequest,
+                     now: float = 0.0) -> ExecutionResult:
         """Disconnect-during-execution path: re-enter DISTRIBUTE with the
         surviving nodes and re-run the request (paper Fig. 4 right edge)."""
-        return self._handle_workload(request)
+        return self._handle_workload(request, now=now)
 
     def _apply_straggler_feedback(self, d: Dispatch, r: ExecutionResult):
         names = [n.name for n in self.table.nodes]

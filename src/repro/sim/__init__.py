@@ -1,0 +1,23 @@
+"""Discrete-event online serving simulation (sim clock, arrivals, faults).
+
+Public surface:
+  * events      — SimClock, EventQueue, SimEvent
+  * arrivals    — PoissonArrivals, DiurnalArrivals, TraceArrivals,
+                  RequestSampler
+  * simulator   — OnlineSimulator, TimedFault, RequestRecord, SimReport
+  * scenarios   — Scenario, build_scenario, SCENARIOS + builders
+"""
+from repro.sim.arrivals import (ArrivalProcess, DiurnalArrivals,
+                                PoissonArrivals, RequestSampler,
+                                TraceArrivals)
+from repro.sim.events import EventQueue, SimClock, SimEvent
+from repro.sim.scenarios import SCENARIOS, Scenario, build_scenario
+from repro.sim.simulator import (OnlineSimulator, RequestRecord, SimReport,
+                                 TimedFault)
+
+__all__ = [
+    "ArrivalProcess", "DiurnalArrivals", "PoissonArrivals",
+    "RequestSampler", "TraceArrivals", "EventQueue", "SimClock", "SimEvent",
+    "SCENARIOS", "Scenario", "build_scenario", "OnlineSimulator",
+    "RequestRecord", "SimReport", "TimedFault",
+]

@@ -1,0 +1,61 @@
+"""Discrete-event machinery: simulated clock + priority event queue.
+
+Events are ordered by (time, seq); ``seq`` is a monotonically increasing
+tie-breaker so same-timestamp events fire in push order (FIFO), which keeps
+runs deterministic under seeded arrival processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SimEvent:
+    """One timed occurrence in the simulation.
+
+    Kinds used by the online simulator:
+      * ``arrival``         — payload["request"]: InferenceRequest
+      * ``share_done``      — payload["node"], payload["share_id"]
+      * ``disconnect`` / ``reconnect``      — payload["node"]
+      * ``straggler`` / ``straggler_clear`` — payload["node"], ["slowdown"]
+    """
+    time: float
+    seq: int
+    kind: str
+    payload: Dict[str, Any]
+
+
+class EventQueue:
+    """Min-heap of SimEvents keyed on (time, seq)."""
+
+    def __init__(self):
+        self._heap: list[Tuple[float, int, SimEvent]] = []
+        self._seq = 0
+
+    def push(self, time: float, kind: str, **payload: Any) -> SimEvent:
+        ev = SimEvent(time=time, seq=self._seq, kind=kind, payload=payload)
+        heapq.heappush(self._heap, (time, self._seq, ev))
+        self._seq += 1
+        return ev
+
+    def pop(self) -> SimEvent:
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+class SimClock:
+    """Monotone simulated time; advanced only by the event loop."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = start
+
+    def advance_to(self, t: float):
+        assert t >= self.now - 1e-12, f"clock moved backwards: {self.now} -> {t}"
+        self.now = max(self.now, t)

@@ -1,0 +1,154 @@
+"""Scenario DSL: canned online-serving situations for the simulator.
+
+A ``Scenario`` is (arrival process, timed faults, horizon) built against a
+ProfilingTable so arrival rates and perf requirements scale with the
+cluster actually being simulated. Builders:
+
+  * ``steady``          — homogeneous Poisson at ``load`` x the cluster's
+                          full-accuracy capacity
+  * ``diurnal``         — sinusoidal ramp (day/night traffic swing)
+  * ``node-churn``      — steady load + two mid-stream disconnects and one
+                          reconnect (paper Fig. 9, online)
+  * ``straggler-storm`` — steady load + rolling DVFS slowdowns that later
+                          clear (paper's throttling experiment, online)
+
+Use :func:`build_scenario` / ``SCENARIOS`` for name-based lookup
+(benchmarks/run_sim.py) or call the builders directly with custom knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.profiling import ProfilingTable
+from repro.core.requests import InferenceRequest
+from repro.sim.arrivals import (Arrival, ArrivalProcess, DiurnalArrivals,
+                                PoissonArrivals, RequestSampler,
+                                TraceArrivals)
+from repro.sim.simulator import TimedFault
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One reproducible serving situation: who arrives when, what breaks."""
+    name: str
+    description: str
+    arrivals: List[Arrival]
+    faults: List[TimedFault]
+    horizon_s: float
+
+
+def _rate_for_load(table: ProfilingTable, sampler: RequestSampler,
+                   load: float) -> float:
+    """Requests/s such that offered work ~= load x full-accuracy capacity.
+
+    Capacity is the level-0 cluster throughput (items/s); the mean request
+    carries mean(item_choices) items.
+    """
+    capacity = table.perf[0].sum()
+    mean_items = float(np.mean(sampler.item_choices))
+    return load * capacity / mean_items
+
+
+def steady(table: ProfilingTable, *, seed: int = 0, horizon_s: float = 60.0,
+           load: float = 0.7,
+           sampler: Optional[RequestSampler] = None) -> Scenario:
+    sampler = sampler or RequestSampler(table)
+    rate = _rate_for_load(table, sampler, load)
+    return Scenario(
+        name="steady",
+        description=f"Poisson arrivals at {load:.0%} of full-accuracy "
+                    f"capacity ({rate:.2f} req/s) for {horizon_s:.0f}s",
+        arrivals=PoissonArrivals(rate, horizon_s, sampler, seed).generate(),
+        faults=[], horizon_s=horizon_s)
+
+
+def diurnal(table: ProfilingTable, *, seed: int = 0, horizon_s: float = 120.0,
+            load: float = 0.55, amplitude: float = 0.8,
+            sampler: Optional[RequestSampler] = None) -> Scenario:
+    sampler = sampler or RequestSampler(table)
+    rate = _rate_for_load(table, sampler, load)
+    return Scenario(
+        name="diurnal",
+        description=f"sinusoidal ramp around {load:.0%} load, "
+                    f"peak {(1 + amplitude) * load:.0%}",
+        arrivals=DiurnalArrivals(rate, horizon_s, sampler, seed,
+                                 amplitude=amplitude).generate(),
+        faults=[], horizon_s=horizon_s)
+
+
+def node_churn(table: ProfilingTable, *, seed: int = 0,
+               horizon_s: float = 90.0, load: float = 0.85,
+               sampler: Optional[RequestSampler] = None) -> Scenario:
+    """Two weakest nodes drop mid-stream; one comes back — every drop
+    re-DISTRIBUTEs the affected in-flight requests over the survivors."""
+    sampler = sampler or RequestSampler(table)
+    rate = _rate_for_load(table, sampler, load)
+    names = [n.name for n in table.nodes]
+    victims = [names[-1], names[-2] if len(names) > 1 else names[-1]]
+    return Scenario(
+        name="node-churn",
+        description=f"steady {load:.0%} load; {victims[0]} drops at 1/3 "
+                    f"horizon (rejoins at 2/3), {victims[1]} drops at 1/2",
+        arrivals=PoissonArrivals(rate, horizon_s, sampler, seed).generate(),
+        faults=[
+            TimedFault(time=horizon_s / 3, kind="disconnect",
+                       node=victims[0]),
+            TimedFault(time=horizon_s / 2, kind="disconnect",
+                       node=victims[1]),
+            TimedFault(time=2 * horizon_s / 3, kind="reconnect",
+                       node=victims[0]),
+        ],
+        horizon_s=horizon_s)
+
+
+def straggler_storm(table: ProfilingTable, *, seed: int = 0,
+                    horizon_s: float = 90.0, load: float = 0.5,
+                    slowdown: float = 0.4,
+                    sampler: Optional[RequestSampler] = None) -> Scenario:
+    """Rolling DVFS-style throttling: each node in turn runs at
+    ``slowdown`` x its profiled perf for a window, then recovers."""
+    sampler = sampler or RequestSampler(table)
+    rate = _rate_for_load(table, sampler, load)
+    names = [n.name for n in table.nodes]
+    window = horizon_s / (len(names) + 1)
+    faults: List[TimedFault] = []
+    for i, n in enumerate(names):
+        t0 = window * (i + 0.5)
+        faults.append(TimedFault(time=t0, kind="straggler", node=n,
+                                 slowdown=slowdown))
+        faults.append(TimedFault(time=t0 + window, kind="straggler_clear",
+                                 node=n))
+    return Scenario(
+        name="straggler-storm",
+        description=f"rolling {slowdown:g}x slowdowns, one node at a time",
+        arrivals=PoissonArrivals(rate, horizon_s, sampler, seed).generate(),
+        faults=faults, horizon_s=horizon_s)
+
+
+def trace(table: ProfilingTable, arrivals: Sequence[Arrival],
+          faults: Sequence[TimedFault] = (), *,
+          name: str = "trace") -> Scenario:
+    """Wrap an explicit trace + fault list (tests, replayed logs)."""
+    arr = TraceArrivals(arrivals).generate()
+    horizon = max((t for t, _ in arr), default=0.0)
+    return Scenario(name=name, description="explicit trace",
+                    arrivals=arr, faults=list(faults), horizon_s=horizon)
+
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "steady": steady,
+    "diurnal": diurnal,
+    "node-churn": node_churn,
+    "straggler-storm": straggler_storm,
+}
+
+
+def build_scenario(name: str, table: ProfilingTable, *, seed: int = 0,
+                   **kwargs) -> Scenario:
+    if name not in SCENARIOS:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
+    return SCENARIOS[name](table, seed=seed, **kwargs)

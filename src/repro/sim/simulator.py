@@ -1,0 +1,328 @@
+"""Discrete-event online serving simulator (paper §IV under sustained load).
+
+Drives the existing GatewayNode FSM and dispatch policies on a simulated
+clock: requests arrive over time (Poisson / diurnal / trace), the GN
+re-enters DISTRIBUTE per request, and each assignment becomes a *share* on
+its node's FIFO work queue with a service time from ``SimBackend``.
+Disconnect / reconnect / straggler faults are timed events injected
+mid-stream; a disconnect aborts the dead node's in-flight + queued shares
+and re-DISTRIBUTEs the affected requests over the survivors (paper Fig. 9,
+now happening *during* execution instead of between manual calls).
+
+Per-request accounting: arrival -> dispatch -> per-share queue wait ->
+last-share completion; deadline = the request's ``latency_budget_s``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.requests import (Assignment, Dispatch, ExecutionResult,
+                                 InferenceRequest, violation_summary)
+from repro.core.resource_manager import Event, GatewayNode
+from repro.sim.events import EventQueue, SimClock, SimEvent
+
+
+@dataclasses.dataclass
+class TimedFault:
+    """A scenario-injected cluster event on the sim clock."""
+    time: float
+    kind: str                 # disconnect | reconnect | straggler | straggler_clear
+    node: str
+    slowdown: float = 1.0
+
+
+@dataclasses.dataclass
+class _Share:
+    """One node's slice of a dispatched request, living on a work queue."""
+    share_id: int
+    rid: int
+    epoch: int                # request dispatch generation (stale detection)
+    assignment: Assignment
+    enqueue_s: float
+    start_s: float = -1.0
+    finish_s: float = -1.0
+    service_s: float = 0.0
+
+
+class _NodeQueue:
+    """FIFO work queue + single-server execution model for one node."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.up = True
+        self.running: Optional[_Share] = None
+        self.queue: Deque[_Share] = collections.deque()
+
+    def drop_rid(self, rid: int):
+        self.queue = collections.deque(s for s in self.queue if s.rid != rid)
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle of one request through the simulator."""
+    request: InferenceRequest
+    arrival_s: float
+    dispatch_s: float = -1.0          # latest (re-)DISTRIBUTE time
+    first_dispatch_s: float = -1.0
+    finish_s: float = -1.0
+    queue_wait_s: float = 0.0         # max share wait of the final dispatch
+    redistributed: int = 0            # disconnect-triggered re-dispatches
+    result: Optional[ExecutionResult] = None
+    # internal scheduling state
+    epoch: int = 0
+    pending_shares: int = 0
+    dispatch: Optional[Dispatch] = None
+    per_node_time: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+    @property
+    def meets_deadline(self) -> bool:
+        return self.done and self.latency_s <= (
+            self.request.latency_budget_s + 1e-9)
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Outcome of one simulated run of one policy over one scenario."""
+    policy: str
+    scenario: str
+    horizon_s: float
+    records: List[RequestRecord]
+    log: List[str]
+
+    def summary(self) -> Dict[str, float]:
+        done = [r.result for r in self.records if r.done]
+        s = violation_summary(done)
+        n = max(len(self.records), 1)
+        s["completed"] = float(len(done))
+        s["offered"] = float(len(self.records))
+        s["deadline_violation_rate"] = (
+            sum(not r.meets_deadline for r in self.records) / n)
+        s["redistributes"] = float(sum(r.redistributed for r in self.records))
+        return s
+
+
+class OnlineSimulator:
+    """Event loop tying arrivals + faults to the GatewayNode and the
+    per-node work queues. Run-to-completion: after the last arrival the
+    loop drains every queue, so overloaded policies pay their backlog in
+    latency rather than dropping work."""
+
+    MAX_EVENTS = 2_000_000    # runaway guard
+
+    def __init__(self, gn: GatewayNode,
+                 arrivals: Sequence[Tuple[float, InferenceRequest]],
+                 faults: Sequence[TimedFault] = (),
+                 scenario: str = "custom", horizon_s: float = 0.0):
+        self.gn = gn
+        self.backend = gn.backend
+        self.clock = SimClock()
+        self.events = EventQueue()
+        self.nodes: Dict[str, _NodeQueue] = {
+            n.name: _NodeQueue(n.name) for n in gn.table.nodes}
+        self.records: Dict[int, RequestRecord] = {}
+        self.log: List[str] = []
+        self.scenario = scenario
+        self.horizon_s = horizon_s or (
+            max((t for t, _ in arrivals), default=0.0))
+        self._share_seq = 0
+        self._parked: List[InferenceRequest] = []   # no available nodes
+        seen_rids = set()
+        for t, req in arrivals:
+            assert abs(req.arrival_s - t) < 1e-9, (
+                f"request {req.rid}: arrival_s={req.arrival_s} disagrees "
+                f"with its scheduled arrival time {t}")
+            assert req.rid not in seen_rids, (
+                f"duplicate rid {req.rid} in arrival trace; records and "
+                "share accounting are keyed by rid")
+            seen_rids.add(req.rid)
+            self.events.push(t, "arrival", request=req)
+        for f in faults:
+            self.events.push(f.time, f.kind, node=f.node,
+                             slowdown=f.slowdown)
+
+    # ---- logging -----------------------------------------------------
+    def _log(self, msg: str):
+        self.log.append(f"t={self.clock.now:10.3f}s  {msg}")
+
+    # ---- main loop ---------------------------------------------------
+    def run(self) -> SimReport:
+        if not self.gn._profiled:
+            self.gn.startup()
+        n_events = 0
+        while self.events:
+            ev = self.events.pop()
+            self.clock.advance_to(ev.time)
+            self._handle(ev)
+            n_events += 1
+            if n_events > self.MAX_EVENTS:
+                raise RuntimeError("simulator exceeded MAX_EVENTS")
+        return SimReport(policy=self.gn.policy, scenario=self.scenario,
+                         horizon_s=self.horizon_s,
+                         records=[self.records[k]
+                                  for k in sorted(self.records)],
+                         log=self.log)
+
+    def _handle(self, ev: SimEvent):
+        now = self.clock.now
+        if ev.kind == "arrival":
+            req: InferenceRequest = ev.payload["request"]
+            rec = RequestRecord(request=req, arrival_s=req.arrival_s)
+            self.records[req.rid] = rec
+            self._dispatch(rec, now)
+        elif ev.kind == "share_done":
+            self._share_done(ev.payload["node"], ev.payload["share_id"])
+        elif ev.kind == "disconnect":
+            self._disconnect(ev.payload["node"])
+        elif ev.kind == "reconnect":
+            self._reconnect(ev.payload["node"])
+        elif ev.kind in ("straggler", "straggler_clear"):
+            slowdown = (1.0 if ev.kind == "straggler_clear"
+                        else ev.payload["slowdown"])
+            self.gn.handle(Event(kind="straggler", node=ev.payload["node"],
+                                 slowdown=slowdown, time=now))
+            self._log(f"{ev.kind} node={ev.payload['node']} "
+                      f"slowdown={slowdown:g}")
+        else:
+            raise ValueError(f"unknown sim event kind: {ev.kind}")
+
+    # ---- dispatch & execution ---------------------------------------
+    def _dispatch(self, rec: RequestRecord, now: float):
+        """GN re-enters DISTRIBUTE for this request; shares hit the queues."""
+        try:
+            d = self.gn.plan(rec.request)
+        except RuntimeError:
+            # every node down: park until a reconnect re-admits it
+            self._parked.append(rec.request)
+            self._log(f"rid={rec.request.rid} parked (no available nodes)")
+            return
+        rec.epoch += 1
+        rec.dispatch = d
+        rec.dispatch_s = now
+        if rec.first_dispatch_s < 0:
+            rec.first_dispatch_s = now
+        rec.per_node_time = {}
+        rec.queue_wait_s = 0.0
+        rec.pending_shares = sum(1 for a in d.assignments if a.items > 0)
+        for a in d.assignments:
+            if a.items == 0:
+                continue
+            self._share_seq += 1
+            share = _Share(share_id=self._share_seq, rid=rec.request.rid,
+                           epoch=rec.epoch, assignment=a, enqueue_s=now)
+            nq = self.nodes[a.node]
+            nq.queue.append(share)
+            self._maybe_start(nq)
+
+    def _maybe_start(self, nq: _NodeQueue):
+        if not nq.up or nq.running is not None or not nq.queue:
+            return
+        share = nq.queue.popleft()
+        share.start_s = self.clock.now
+        share.service_s = self.backend.assignment_time(share.assignment)
+        share.finish_s = share.start_s + share.service_s
+        nq.running = share
+        self.events.push(share.finish_s, "share_done", node=nq.name,
+                         share_id=share.share_id)
+
+    def _share_done(self, node: str, share_id: int):
+        nq = self.nodes[node]
+        share = nq.running
+        if share is None or share.share_id != share_id:
+            return                      # aborted by a disconnect: stale event
+        nq.running = None
+        rec = self.records[share.rid]
+        if share.epoch == rec.epoch and not rec.done:
+            rec.per_node_time[node] = share.service_s
+            rec.queue_wait_s = max(rec.queue_wait_s,
+                                   share.start_s - rec.dispatch_s)
+            rec.pending_shares -= 1
+            if rec.pending_shares == 0:
+                self._finalize(rec)
+        # else: a share of a superseded dispatch generation — discard,
+        # the node just paid the time.
+        self._maybe_start(nq)
+
+    def _finalize(self, rec: RequestRecord):
+        now = self.clock.now
+        rec.finish_s = now
+        d = rec.dispatch
+        # makespan_s = dispatch-to-finish span (queue wait included; offline
+        # this equals the service makespan since all shares start at
+        # dispatch). achieved_perf keeps the offline meaning — pure node
+        # execution throughput — so perf_violation stays comparable across
+        # paths; queueing pressure shows up in latency_s / meets_deadline.
+        makespan = max(now - rec.dispatch_s, 1e-12)
+        exec_makespan = max(rec.per_node_time.values(), default=1e-12)
+        total = d.total_items
+        result = ExecutionResult(
+            request=rec.request, policy=d.policy,
+            achieved_perf=total / max(exec_makespan, 1e-12),
+            achieved_acc=self.backend.dispatch_accuracy(d),
+            makespan_s=makespan, per_node_time=dict(rec.per_node_time),
+            arrival_s=rec.arrival_s, start_s=rec.dispatch_s,
+            finish_s=now, queue_wait_s=rec.queue_wait_s)
+        rec.result = result
+        self.gn.complete(d, result)
+        self._log(f"rid={rec.request.rid} done "
+                  f"latency={rec.latency_s:.3f}s "
+                  f"wait={rec.queue_wait_s:.3f}s "
+                  f"{'OK' if rec.meets_deadline else 'DEADLINE-MISS'}")
+
+    # ---- faults ------------------------------------------------------
+    def _disconnect(self, node: str):
+        now = self.clock.now
+        self.gn.handle(Event(kind="disconnect", node=node, time=now))
+        nq = self.nodes[node]
+        nq.up = False
+        affected: List[int] = []
+
+        def _current(s: _Share) -> bool:
+            # a share of a superseded dispatch generation is dead work
+            # already — losing it must not re-DISTRIBUTE the request again
+            rec = self.records[s.rid]
+            return s.epoch == rec.epoch and not rec.done
+
+        if nq.running is not None:
+            if _current(nq.running):
+                affected.append(nq.running.rid)
+            nq.running = None           # abort in-flight share
+        for s in nq.queue:
+            if _current(s) and s.rid not in affected:
+                affected.append(s.rid)
+        nq.queue.clear()
+        self._log(f"disconnect node={node} "
+                  f"({len(affected)} in-flight request(s) affected)")
+        # Fig. 4 right edge: re-enter DISTRIBUTE over the survivors for
+        # every request that lost a share, in arrival order.
+        for rid in sorted(affected,
+                          key=lambda r: self.records[r].arrival_s):
+            rec = self.records[rid]
+            if rec.done:
+                continue
+            for other in self.nodes.values():
+                other.drop_rid(rid)     # cancel not-yet-started shares
+            rec.redistributed += 1
+            self._log(f"re-DISTRIBUTE rid={rid} over survivors "
+                      f"(disconnect of {node})")
+            self._dispatch(rec, now)
+
+    def _reconnect(self, node: str):
+        now = self.clock.now
+        self.gn.handle(Event(kind="reconnect", node=node, time=now))
+        self.nodes[node].up = True
+        self._log(f"reconnect node={node}")
+        self._maybe_start(self.nodes[node])
+        parked, self._parked = self._parked, []
+        for req in parked:
+            self._log(f"rid={req.rid} re-admitted after reconnect")
+            self._dispatch(self.records[req.rid], now)

@@ -93,6 +93,38 @@ def test_oracle_dominates_heuristic_accuracy(table):
             assert r_orac.achieved_acc >= r_prop.achieved_acc - 0.25
 
 
+def test_oracle_never_below_proportional_randomized():
+    """The optimality-gap property dispatch.py claims: on feasible
+    requests the exact oracle never achieves LOWER accuracy than the
+    paper heuristic. Randomized over seeded measured profiling tables
+    (item-split rounding allows a hair of slack on large batches)."""
+    cfg = get_config("phi4-mini-3.8b")
+    pool = VariantPool(cfg)
+    m = len(pool)
+    rng = np.random.default_rng(1234)
+    both_met = 0
+    for trial in range(25):
+        n = int(rng.integers(2, 6))
+        caps = rng.uniform(10.0, 5000.0, n)
+        speed = np.linspace(1.0, 2.1, m)[:, None]
+        nodes = [NodeProfile(f"n{i}", chips=1) for i in range(n)]
+        tbl = ProfilingTable(pool, nodes, measured=caps[None, :] * speed)
+        lo, hi = tbl.perf[0].sum(), tbl.perf[-1].sum()
+        frac = float(rng.uniform(0.0, 0.9))
+        req = InferenceRequest(rid=trial, num_items=5000,
+                               perf_req=(lo + frac * (hi - lo)) / 1.03,
+                               acc_req=0.0)
+        backend = SimBackend(tbl)
+        r_prop = backend.execute(proportional(tbl, req))
+        r_orac = backend.execute(exact_oracle(tbl, req))
+        if r_prop.meets_perf and r_orac.meets_perf:
+            both_met += 1
+            assert r_orac.achieved_acc >= r_prop.achieved_acc - 0.05, (
+                f"trial {trial}: oracle {r_orac.achieved_acc:.4f} < "
+                f"proportional {r_prop.achieved_acc:.4f}")
+    assert both_met >= 15      # the property must not hold vacuously
+
+
 def test_disconnect_redistribution(table):
     """Paper Fig. 9: progressively disconnect nodes; the policy keeps
     dispatching over survivors."""

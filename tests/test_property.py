@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dispatch import POLICIES, proportional

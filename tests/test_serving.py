@@ -91,3 +91,49 @@ def test_batch_scheduler_left_pads():
     assert batch.shape == (3, 3)
     np.testing.assert_array_equal(batch[1], [0, 4, 5])
     assert sched.next_batch() is None
+
+
+def test_pad_caches_ring_slot_invariant():
+    """The docstring's ring-buffer contract, checked on the raw buffer:
+    after ``pad_caches`` a sliding-window KV cache must hold position p in
+    slot p % window for each of the last ``window`` prefill positions."""
+    from repro.serving.engine import _pad_kv
+    from repro.models.attention import KVCache
+
+    L, B, KV, D = 2, 1, 1, 4
+    for S, w in ((13, 8), (16, 8), (8, 8), (9, 4), (5, 8)):
+        # encode the absolute position p into every element of slot p
+        x = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.float32)[None, None, :, None, None],
+            (L, B, S, KV, D))
+        out = _pad_kv(KVCache(k=x, v=x), max_len=32, seq_len=S, window=w)
+        eff_w = min(w, 32)
+        if S >= eff_w:
+            assert out.k.shape[2] == eff_w
+            for p in range(S - eff_w, S):
+                slot = np.asarray(out.k)[:, :, p % eff_w]
+                np.testing.assert_array_equal(
+                    slot, np.full((L, B, KV, D), p, np.float32),
+                    err_msg=f"S={S} w={w}: slot {p % eff_w} != position {p}")
+        else:
+            # shorter-than-window prompts are zero-padded, identity layout
+            for p in range(S):
+                np.testing.assert_array_equal(
+                    np.asarray(out.k)[:, :, p],
+                    np.full((L, B, KV, D), p, np.float32))
+
+
+def test_batch_scheduler_fifo_order_across_batches():
+    """Prompts drain in arrival (FIFO) order across successive batches,
+    each left-padded to its own batch's max length."""
+    sched = BatchScheduler(batch_size=2)
+    prompts = [np.arange(1, n + 1, dtype=np.int32) for n in (3, 1, 2, 4, 2)]
+    for p in prompts:
+        sched.add(p)
+    seen = []
+    while (batch := sched.next_batch()) is not None:
+        assert batch.shape[0] <= 2
+        for row in batch:
+            seen.append(row[row != 0].tolist())
+    assert seen == [p.tolist() for p in prompts]
+    assert sched.next_batch() is None

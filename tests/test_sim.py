@@ -1,0 +1,183 @@
+"""Online serving simulator tests: deterministic arrivals, FIFO queue-wait
+accounting, mid-stream disconnect -> re-DISTRIBUTE, policy comparison."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import DEFAULT_NODES, SimBackend
+from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.requests import InferenceRequest
+from repro.core.resource_manager import GatewayNode
+from repro.core.variants import VariantPool
+from repro.sim import (DiurnalArrivals, OnlineSimulator, PoissonArrivals,
+                       RequestSampler, TimedFault, build_scenario)
+from repro.sim.scenarios import trace as trace_scenario
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return VariantPool(get_config("phi4-mini-3.8b"))
+
+
+def _measured_table(pool, caps):
+    """Table with node j's level-0 throughput = caps[j] items/s and a
+    monotone 1.0->2.1x level speedup ladder (measured path: exact numbers,
+    no roofline model in the way)."""
+    caps = np.asarray(caps, dtype=np.float64)
+    speed = np.linspace(1.0, 2.1, len(pool))[:, None]
+    nodes = [NodeProfile(f"n{i}", chips=1) for i in range(len(caps))]
+    return ProfilingTable(pool, nodes, measured=caps[None, :] * speed)
+
+
+def _default_table(pool):
+    nodes = [NodeProfile(n.name, n.chips, n.capability)
+             for n in DEFAULT_NODES]
+    return ProfilingTable(pool, nodes, seq_len=512)
+
+
+def _run(table, arrivals, faults=(), policy="proportional", **gn_kw):
+    gn = GatewayNode(table, SimBackend(table), policy=policy, **gn_kw)
+    return OnlineSimulator(gn, arrivals, faults).run()
+
+
+# ---- arrivals ---------------------------------------------------------
+def test_poisson_arrivals_deterministic(pool):
+    table = _default_table(pool)
+    sampler = RequestSampler(table)
+    a1 = PoissonArrivals(5.0, 10.0, sampler, seed=42).generate()
+    a2 = PoissonArrivals(5.0, 10.0, sampler, seed=42).generate()
+    a3 = PoissonArrivals(5.0, 10.0, sampler, seed=43).generate()
+    assert len(a1) > 10
+    assert [t for t, _ in a1] == [t for t, _ in a2]
+    assert [r for _, r in a1] == [r for _, r in a2]     # frozen dataclasses
+    assert [t for t, _ in a1] != [t for t, _ in a3]
+    assert all(0 <= t < 10.0 for t, _ in a1)
+    assert all(r.arrival_s == t for t, r in a1)
+    assert all(r.deadline_s > 0 for _, r in a1)
+
+
+def test_diurnal_arrivals_deterministic_and_modulated(pool):
+    table = _default_table(pool)
+    sampler = RequestSampler(table)
+    proc = DiurnalArrivals(4.0, 40.0, sampler, seed=7, amplitude=0.9,
+                           period_s=40.0)
+    a1, a2 = proc.generate(), proc.generate()
+    assert [t for t, _ in a1] == [t for t, _ in a2]
+    # rising half-period (sin>0) must outdraw the falling half
+    first = sum(1 for t, _ in a1 if t < 20.0)
+    second = len(a1) - first
+    assert first > second
+
+
+def test_end_to_end_seeded_run_reproducible(pool):
+    results = []
+    for _ in range(2):
+        table = _default_table(pool)
+        sc = build_scenario("steady", table, seed=3, horizon_s=5.0)
+        results.append(_run(table, sc.arrivals, sc.faults).summary())
+    assert results[0] == results[1]
+
+
+# ---- queue-wait accounting -------------------------------------------
+def test_fifo_queue_wait_accounting(pool):
+    """Single-node cluster: the second request's queue wait is exactly the
+    first request's remaining service time, and starts back-to-back."""
+    table = _measured_table(pool, [100.0])
+    # level-0 service time for 100 items at 100 items/s = 1.0s each; tiny
+    # perf_req so the policy stays at level 0 (no approximation)
+    r0 = InferenceRequest(rid=0, num_items=100, perf_req=10.0, acc_req=0.0,
+                          arrival_s=0.0, deadline_s=100.0)
+    r1 = InferenceRequest(rid=1, num_items=100, perf_req=10.0, acc_req=0.0,
+                          arrival_s=0.25, deadline_s=100.0)
+    sc = trace_scenario(table, [(0.0, r0), (0.25, r1)])
+    rep = _run(table, sc.arrivals)
+    rec0, rec1 = rep.records
+    assert rec0.queue_wait_s == pytest.approx(0.0, abs=1e-9)
+    assert rec0.finish_s == pytest.approx(1.0, rel=1e-9)
+    # r1 dispatched on arrival but its share waits for r0's share to finish
+    assert rec1.result.start_s == pytest.approx(0.25, rel=1e-9)
+    assert rec1.queue_wait_s == pytest.approx(0.75, rel=1e-9)
+    assert rec1.finish_s == pytest.approx(2.0, rel=1e-9)
+    assert rec1.latency_s == pytest.approx(1.75, rel=1e-9)
+
+
+def test_queue_drains_everything_under_overload(pool):
+    """Run-to-completion: even an overloaded policy finishes all offered
+    requests once arrivals stop (backlog paid in latency, not drops)."""
+    table = _default_table(pool)
+    sc = build_scenario("steady", table, seed=1, horizon_s=5.0, load=1.5)
+    rep = _run(table, sc.arrivals, policy="uniform")
+    s = rep.summary()
+    assert s["completed"] == s["offered"] > 0
+    # saturated: later requests wait far longer than early ones
+    assert rep.records[-1].queue_wait_s > rep.records[0].queue_wait_s
+
+
+# ---- mid-stream disconnect -> re-DISTRIBUTE --------------------------
+def test_mid_stream_disconnect_redistributes_on_survivors(pool):
+    """A node dies while serving: the affected request is re-planned over
+    the survivors at the disconnect instant and still completes."""
+    table = _measured_table(pool, [100.0, 100.0])
+    # one long request split across both nodes; n1 dies mid-execution
+    r0 = InferenceRequest(rid=0, num_items=200, perf_req=150.0, acc_req=0.0,
+                          arrival_s=0.0, deadline_s=1e9)
+    sc = trace_scenario(
+        table, [(0.0, r0)],
+        faults=[TimedFault(time=0.3, kind="disconnect", node="n1")])
+    rep = _run(table, sc.arrivals, sc.faults)
+    rec = rep.records[0]
+    assert rec.done
+    assert rec.redistributed == 1
+    assert any("re-DISTRIBUTE rid=0" in line for line in rep.log)
+    # the final dispatch must exclude the dead node entirely
+    assert all(a.node != "n1" for a in rec.dispatch.assignments)
+    assert rec.result.per_node_time.keys() == {"n0"}
+    # re-planned at t=0.3, so it finishes later than the fault time
+    assert rec.finish_s > 0.3
+    # and the GN saw the disconnect: only n0 remains available
+    avail = [n.name for n in table.nodes if n.available]
+    assert avail == ["n0"]
+
+
+def test_disconnect_then_reconnect_readmits_parked(pool):
+    """All nodes down parks arrivals; reconnect re-admits and completes
+    them (no lost work)."""
+    table = _measured_table(pool, [100.0])
+    r0 = InferenceRequest(rid=0, num_items=50, perf_req=10.0, acc_req=0.0,
+                          arrival_s=0.5, deadline_s=1e9)
+    sc = trace_scenario(
+        table, [(0.5, r0)],
+        faults=[TimedFault(time=0.0, kind="disconnect", node="n0"),
+                TimedFault(time=1.0, kind="reconnect", node="n0")])
+    rep = _run(table, sc.arrivals, sc.faults)
+    rec = rep.records[0]
+    assert rec.done
+    assert any("parked" in line for line in rep.log)
+    assert rec.result.start_s == pytest.approx(1.0, rel=1e-9)
+
+
+# ---- policy comparison -----------------------------------------------
+def test_proportional_violation_rate_not_worse_than_uniform(pool):
+    """On the heterogeneous default cluster under steady load, the paper
+    policy's deadline-violation rate never exceeds the uniform split's."""
+    rates = {}
+    for policy in ("uniform", "proportional"):
+        table = _default_table(pool)
+        sc = build_scenario("steady", table, seed=0, horizon_s=10.0)
+        rep = _run(table, sc.arrivals, policy=policy)
+        s = rep.summary()
+        assert s["completed"] == s["offered"]
+        rates[policy] = s["deadline_violation_rate"]
+    assert rates["proportional"] <= rates["uniform"]
+
+
+def test_straggler_storm_slows_then_recovers(pool):
+    """A straggler fault inflates service times while active; the seeded
+    run completes and logs both onset and clearing."""
+    table = _default_table(pool)
+    sc = build_scenario("straggler-storm", table, seed=2, horizon_s=12.0,
+                        load=0.3)
+    rep = _run(table, sc.arrivals, sc.faults)
+    assert rep.summary()["completed"] == rep.summary()["offered"]
+    assert any(line for line in rep.log if "straggler node=" in line)
+    assert any(line for line in rep.log if "straggler_clear" in line)
