@@ -6,15 +6,14 @@ headline metric for that row). Run:  PYTHONPATH=src python -m benchmarks.run
 from __future__ import annotations
 
 import time
-from typing import Dict, List
 
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.cluster import DEFAULT_NODES, SimBackend
-from repro.core.dispatch import POLICIES, dispatch
+from repro.core.dispatch import dispatch
 from repro.core.profiling import NodeProfile, ProfilingTable
-from repro.core.requests import InferenceRequest, violation_summary
+from repro.core.requests import InferenceRequest
 from repro.core.resource_manager import Event, GatewayNode
 from repro.core.variants import VariantPool
 

@@ -1,21 +1,34 @@
-"""Online serving benchmark: sweep dispatch policies across simulator
-scenarios and report per-policy latency / deadline / accuracy metrics —
-the paper's Table/Fig comparisons, now under sustained load.
+"""Online serving benchmark: sweep dispatch policy x admission control x
+autoscaling across simulator scenarios and report per-configuration
+latency / deadline / goodput metrics — the paper's comparisons, now under
+sustained load with a closed-loop gateway.
 
 Run:
   PYTHONPATH=src python benchmarks/run_sim.py \
       --scenario steady --policies uniform,proportional
-  PYTHONPATH=src python benchmarks/run_sim.py --scenario all --verbose
+  PYTHONPATH=src python benchmarks/run_sim.py --scenario overload
+  PYTHONPATH=src python benchmarks/run_sim.py --scenario all --verbose \
+      --json sim_metrics.json
 
-Output: one CSV-ish row per (scenario, policy) with
-p50/p99 latency, deadline-violation rate, mean accuracy, mean queue wait,
-and the number of disconnect-triggered re-DISTRIBUTEs. ``--verbose``
-additionally prints the simulator event log (disconnects, re-DISTRIBUTEs,
-stragglers) for fault scenarios.
+Output: one CSV-ish row per (scenario, policy, control) with p50/p99
+latency, the deadline-violation rate *for admitted requests*, goodput
+(admitted requests that met their deadline, per sim-second), shed rate,
+degraded-admission count, scale-up count + latency, and mean accuracy.
+``--control`` picks the gateway configurations to sweep:
+
+  none       PR 1 behaviour — every request admitted, fixed node set
+  admission  token-bucket + SLO-feasibility gate (reject/degrade)
+  autoscale  standby-pool scaling only (every request admitted)
+  full       admission + autoscaling
+
+``--json`` additionally dumps every row (plus the admission outcome and
+scaling-action detail) as a JSON array — CI uploads this as the nightly
+bench artifact so the metric trajectory is diffable across commits.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -26,42 +39,63 @@ except ModuleNotFoundError:     # run from a checkout without PYTHONPATH=src
         os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
 
 from repro.configs import get_config
-from repro.core.cluster import DEFAULT_NODES, SimBackend
+from repro.control import AdmissionController, Autoscaler
+from repro.core.cluster import STANDBY_NODES, SimBackend, cluster_nodes
 from repro.core.dispatch import POLICIES
-from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.profiling import ProfilingTable
 from repro.core.resource_manager import GatewayNode
 from repro.core.variants import VariantPool
 from repro.sim import SCENARIOS, OnlineSimulator, build_scenario
 
 ARCH = "phi4-mini-3.8b"
+CONTROL_MODES = ("none", "admission", "autoscale", "full")
 
 
-def _fresh_table(seq_len: int = 512) -> ProfilingTable:
-    """Each (scenario, policy) run gets its own table: the GN mutates it
-    (straggler EWMA decay, availability), so sharing would leak state."""
+def _fresh_table(num_standby: int, seq_len: int = 512) -> ProfilingTable:
+    """Each run gets its own table: the GN mutates it (straggler EWMA,
+    availability, re-profiling), so sharing would leak state. Standby
+    slices are present-but-unavailable in *every* mode so the seeded
+    arrival trace is identical across control configurations."""
     pool = VariantPool(get_config(ARCH))
-    nodes = [NodeProfile(n.name, n.chips, n.capability)
-             for n in DEFAULT_NODES]
-    return ProfilingTable(pool, nodes, seq_len=seq_len)
+    return ProfilingTable(pool, cluster_nodes(num_standby), seq_len=seq_len)
 
 
-def run_one(scenario_name: str, policy: str, *, seed: int,
-            horizon_s: float, noise_std: float, verbose: bool) -> dict:
-    table = _fresh_table()
+def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
+            horizon_s: float, noise_std: float, num_standby: int,
+            admission_rate: float, verbose: bool) -> dict:
+    table = _fresh_table(num_standby)
     sc = build_scenario(scenario_name, table, seed=seed,
                         horizon_s=horizon_s)
     gn = GatewayNode(table, SimBackend(table, noise_std=noise_std,
                                        seed=seed), policy=policy)
+    admission = None
+    if control in ("admission", "full"):
+        admission = AdmissionController(
+            table, rate=admission_rate if admission_rate > 0 else None)
+    autoscaler = None
+    if control in ("autoscale", "full") and num_standby > 0:
+        autoscaler = Autoscaler(
+            table, [n.name for n in STANDBY_NODES[:num_standby]])
     sim = OnlineSimulator(gn, sc.arrivals, sc.faults,
-                          scenario=sc.name, horizon_s=sc.horizon_s)
+                          scenario=sc.name, horizon_s=sc.horizon_s,
+                          admission=admission, autoscaler=autoscaler)
     report = sim.run()
     if verbose:
         for line in report.log:
             if any(k in line for k in
                    ("disconnect", "re-DISTRIBUTE", "reconnect",
-                    "straggler", "parked")):
-                print(f"    [{policy}] {line}", file=sys.stderr)
-    return report.summary()
+                    "straggler", "parked", "REJECTED", "DEGRADED",
+                    "scale-up", "scale-down", "node_up")):
+                print(f"    [{policy}/{control}] {line}", file=sys.stderr)
+    row = {"scenario": sc.name, "policy": policy, "control": control,
+           "seed": seed}
+    row.update({k: float(v) for k, v in report.summary().items()})
+    row["admission_counts"] = dict(report.admission_counts)
+    row["scaling_actions"] = [
+        {"kind": a.kind, "node": a.node, "decided_s": a.decided_s,
+         "ready_s": a.ready_s, "reason": a.reason}
+        for a in report.scaling]
+    return row
 
 
 def main(argv=None) -> int:
@@ -71,13 +105,27 @@ def main(argv=None) -> int:
     ap.add_argument("--policies", default=",".join(POLICIES),
                     help="comma-separated subset of "
                          f"{sorted(POLICIES)}")
+    ap.add_argument("--control", default="none,full",
+                    help="comma-separated subset of "
+                         f"{CONTROL_MODES} to sweep")
+    ap.add_argument("--standby", type=int, default=2,
+                    help="standby nodes available to the autoscaler "
+                         f"(0..{len(STANDBY_NODES)})")
+    ap.add_argument("--admission-rate", type=float, default=0.0,
+                    help="token-bucket refill rate in req/s "
+                         "(<=0 disables rate shaping; the SLO-feasibility "
+                         "gate always runs)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--horizon", type=float, default=30.0,
                     help="arrival horizon in sim-seconds")
     ap.add_argument("--noise", type=float, default=0.0,
                     help="execution-time noise std (SimBackend)")
+    ap.add_argument("--json", default="",
+                    help="also dump all rows (with admission/scaling "
+                         "detail) to this JSON file")
     ap.add_argument("--verbose", action="store_true",
-                    help="print fault/re-DISTRIBUTE log lines to stderr")
+                    help="print fault/admission/scaling log lines to "
+                         "stderr")
     args = ap.parse_args(argv)
 
     scenario_names = (sorted(SCENARIOS) if args.scenario == "all"
@@ -93,27 +141,58 @@ def main(argv=None) -> int:
     for p in policies:
         if p not in POLICIES:
             ap.error(f"unknown policy {p!r}; have {sorted(POLICIES)}")
+    controls = [c.strip() for c in args.control.split(",") if c.strip()]
+    if not controls:
+        ap.error(f"--control must name at least one of {CONTROL_MODES}")
+    for c in controls:
+        if c not in CONTROL_MODES:
+            ap.error(f"unknown control mode {c!r}; have {CONTROL_MODES}")
     if args.horizon <= 0:
         ap.error("--horizon must be > 0 sim-seconds")
+    if not 0 <= args.standby <= len(STANDBY_NODES):
+        ap.error(f"--standby must be in 0..{len(STANDBY_NODES)}")
+    if args.standby == 0 and any(c in ("autoscale", "full")
+                                 for c in controls):
+        ap.error("--standby 0 leaves the autoscaler with an empty pool; "
+                 "rows labeled 'autoscale'/'full' would silently behave "
+                 "like 'none'/'admission' — raise --standby or drop "
+                 "those control modes")
 
-    cols = ("scenario", "policy", "offered", "completed", "p50_latency_s",
-            "p99_latency_s", "deadline_violation_rate", "mean_acc",
-            "mean_queue_wait_s", "redistributes")
+    cols = ("scenario", "policy", "control", "offered", "admitted",
+            "completed", "shed_rate", "degraded", "p50_latency_s",
+            "p99_latency_s", "deadline_violation_rate", "goodput_rps",
+            "mean_acc", "scale_ups", "mean_scale_up_latency_s",
+            "redistributes")
     print(",".join(cols))
+    rows = []
     for sname in scenario_names:
         for policy in policies:
-            s = run_one(sname, policy, seed=args.seed,
-                        horizon_s=args.horizon, noise_std=args.noise,
-                        verbose=args.verbose)
-            print(",".join([
-                sname, policy,
-                f"{s['offered']:.0f}", f"{s['completed']:.0f}",
-                f"{s['p50_latency_s']:.4f}", f"{s['p99_latency_s']:.4f}",
-                f"{s['deadline_violation_rate']:.3f}",
-                f"{s['mean_acc']:.2f}",
-                f"{s['mean_queue_wait_s']:.4f}",
-                f"{s['redistributes']:.0f}",
-            ]))
+            for control in controls:
+                row = run_one(sname, policy, control, seed=args.seed,
+                              horizon_s=args.horizon,
+                              noise_std=args.noise,
+                              num_standby=args.standby,
+                              admission_rate=args.admission_rate,
+                              verbose=args.verbose)
+                rows.append(row)
+                print(",".join([
+                    row["scenario"], row["policy"], row["control"],
+                    f"{row['offered']:.0f}", f"{row['admitted']:.0f}",
+                    f"{row['completed']:.0f}", f"{row['shed_rate']:.3f}",
+                    f"{row['degraded']:.0f}",
+                    f"{row['p50_latency_s']:.4f}",
+                    f"{row['p99_latency_s']:.4f}",
+                    f"{row['deadline_violation_rate']:.3f}",
+                    f"{row['goodput_rps']:.2f}",
+                    f"{row['mean_acc']:.2f}",
+                    f"{row['scale_ups']:.0f}",
+                    f"{row['mean_scale_up_latency_s']:.2f}",
+                    f"{row['redistributes']:.0f}",
+                ]))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2, sort_keys=True)
+        print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     return 0
 
 

@@ -1,0 +1,2 @@
+"""Reproduction: Adaptive Workload Distribution for Accuracy-aware DNN
+Inference on Collaborative Edge Platforms (JAX/Pallas, TPU-adapted)."""

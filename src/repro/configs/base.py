@@ -8,7 +8,7 @@ attention-free RWKV6, and stub-frontend audio/VLM backbones.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

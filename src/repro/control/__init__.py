@@ -1,0 +1,20 @@
+"""Closed-loop gateway control: admission control + autoscaling.
+
+Public surface:
+  * admission   — TokenBucket, AdmissionController, AdmissionDecision
+  * autoscaler  — Autoscaler, ScalingAction
+
+The simulator (`repro.sim.simulator.OnlineSimulator`) consumes both: the
+AdmissionController gates every arrival (reject / degrade / admit) against
+the token bucket and an SLO-feasibility estimate from live queue depths;
+the Autoscaler spawns/retires standby worker groups from queue-depth and
+deadline-violation signals with cooldown + warm-up dynamics.
+"""
+from repro.control.admission import (AdmissionController, AdmissionDecision,
+                                     TokenBucket)
+from repro.control.autoscaler import Autoscaler, ScalingAction
+
+__all__ = [
+    "AdmissionController", "AdmissionDecision", "TokenBucket",
+    "Autoscaler", "ScalingAction",
+]

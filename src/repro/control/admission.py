@@ -1,0 +1,161 @@
+"""Gateway-side admission control: token bucket + SLO-feasibility check.
+
+The paper's gateway admits every request; under sustained overload every
+dispatch policy then degrades the same way (queues grow without bound and
+p99 explodes). CoEdge/QPART-style feedback closes the loop at the *front
+door* instead: an arrival is admitted only if (a) the token bucket — a
+classic rate shaper refilled on the sim clock — has capacity, and (b) the
+dispatch policy can still meet the request's ``latency_budget_s`` given
+the queue backlog it would face right now.
+
+When the budget is reachable only with more approximation than the
+request's own ``perf_req`` implies, the controller can *degrade* the
+admission instead of rejecting: it rewrites the request with the higher
+effective throughput requirement (forcing the policy onto coarser apx
+levels) and relaxes ``acc_req`` to the deepest variant's accuracy — the
+renegotiated contract the client accepted by opting into degraded service.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional
+
+from repro.core.profiling import ProfilingTable
+from repro.core.requests import InferenceRequest
+
+ADMIT = "admit"
+DEGRADE = "degrade"
+REJECT = "reject"
+
+
+class TokenBucket:
+    """Classic token bucket on the *simulated* clock.
+
+    ``rate`` tokens/s accrue up to ``burst``; one token admits one
+    request. ``rate=None`` disables shaping (the bucket always grants).
+    Refill happens lazily inside :meth:`try_take`, so the bucket never
+    needs a timer — it just needs monotone ``now`` values.
+    """
+
+    def __init__(self, rate: Optional[float], burst: float = 8.0):
+        assert rate is None or rate > 0, "rate must be positive or None"
+        assert burst >= 1.0, "burst must allow at least one token"
+        self.rate = rate
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._last_s = 0.0
+
+    def _refill(self, now: float):
+        if now > self._last_s:
+            self.tokens = min(self.burst,
+                              self.tokens + (now - self._last_s) * self.rate)
+            self._last_s = now
+
+    def try_take(self, now: float) -> bool:
+        if self.rate is None:
+            return True
+        self._refill(now)
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            return True
+        return False
+
+    def peek(self, now: float) -> float:
+        """Current token count after a clock-driven refill (no take)."""
+        if self.rate is None:
+            return float("inf")
+        self._refill(now)
+        return self.tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionDecision:
+    """Outcome of one gate check.
+
+    ``request`` is the request to actually dispatch: the original on
+    ADMIT, a rewritten (higher perf_req, relaxed acc_req) copy on
+    DEGRADE, and the original (undispatched) on REJECT.
+    """
+    outcome: str                  # ADMIT | DEGRADE | REJECT
+    reason: str
+    request: InferenceRequest
+    est_wait_s: float = 0.0       # queue wait the feasibility check assumed
+    needed_perf: float = 0.0      # items/s required to make the deadline
+
+
+class AdmissionController:
+    """SLO-feasibility + rate-shaping gate in front of the dispatch policy.
+
+    Feasibility model: with per-node FIFO queues and a policy that shares
+    the request across every available node, the request's last share
+    starts after the *largest* backlog among the nodes it lands on — so
+    the conservative wait estimate is ``max`` over available-node backlog
+    seconds. The remaining budget then implies the cluster throughput the
+    dispatch must achieve; if even the deepest approximation row cannot
+    deliver it, the request is shed.
+    """
+
+    def __init__(self, table: ProfilingTable, *,
+                 rate: Optional[float] = None, burst: float = 8.0,
+                 degrade: bool = True, feasibility_margin: float = 0.02):
+        self.table = table
+        self.bucket = TokenBucket(rate, burst)
+        self.degrade = degrade
+        self.feasibility_margin = feasibility_margin
+        self.counts: Dict[str, int] = {ADMIT: 0, DEGRADE: 0, REJECT: 0}
+
+    # ---- signals ------------------------------------------------------
+    def _available_capacity(self) -> float:
+        """Cluster items/s at the deepest approximation level."""
+        cols = [j for j, n in enumerate(self.table.nodes) if n.available]
+        if not cols:
+            return 0.0
+        return float(self.table.perf[-1, cols].sum())
+
+    def _est_wait_s(self, backlogs: Mapping[str, float]) -> float:
+        waits = [backlogs.get(n.name, 0.0)
+                 for n in self.table.nodes if n.available]
+        return max(waits, default=0.0)
+
+    # ---- the gate -----------------------------------------------------
+    def decide(self, request: InferenceRequest, now: float,
+               backlogs: Mapping[str, float]) -> AdmissionDecision:
+        """Gate one arrival. ``backlogs`` maps node name -> backlog
+        seconds (running remainder + predicted queued service)."""
+        est_wait = self._est_wait_s(backlogs)
+        budget = request.latency_budget_s
+        remaining = budget - est_wait
+
+        def _done(outcome: str, reason: str,
+                  req: InferenceRequest, needed: float) -> AdmissionDecision:
+            self.counts[outcome] += 1
+            return AdmissionDecision(outcome=outcome, reason=reason,
+                                     request=req, est_wait_s=est_wait,
+                                     needed_perf=needed)
+
+        if remaining <= 0.0:
+            # queue wait alone blows the deadline; no apx level can help
+            return _done(REJECT, "queue_wait_exceeds_budget", request, 0.0)
+
+        needed = request.num_items / remaining
+        capacity = self._available_capacity()
+        if needed > capacity * (1.0 - self.feasibility_margin):
+            return _done(REJECT, "infeasible_at_max_approximation",
+                         request, needed)
+
+        if needed > request.perf_req:
+            # feasible, but only with coarser approximation than the
+            # request's own perf target implies
+            if not self.degrade:
+                return _done(REJECT, "slo_needs_degraded_service",
+                             request, needed)
+            if not self.bucket.try_take(now):
+                return _done(REJECT, "rate_limited", request, needed)
+            degraded = request.degraded(
+                needed, float(self.table.accuracies[-1]))
+            return _done(DEGRADE, "degraded_to_meet_deadline",
+                         degraded, needed)
+
+        if not self.bucket.try_take(now):
+            return _done(REJECT, "rate_limited", request, needed)
+        return _done(ADMIT, "feasible", request, needed)

@@ -15,12 +15,12 @@ analogue). Two backends execute a Dispatch:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.profiling import NodeProfile, ProfilingTable
-from repro.core.requests import Dispatch, ExecutionResult, InferenceRequest
+from repro.core.requests import Dispatch, ExecutionResult
 
 
 # The paper's default 4-node testbed, TPU-translated: four unequal slices
@@ -34,6 +34,27 @@ DEFAULT_NODES = (
     NodeProfile("slice-c", chips=64, capability=1.00),    # 4x16
     NodeProfile("slice-d", chips=48, capability=0.80),    # 3x16, old gen
 )
+
+# Standby pool for the autoscaler: pre-provisioned slices kept out of the
+# serving set (available=False) until queue-depth / deadline-violation
+# signals spawn them. Profiled at table build like everyone else, so a
+# spawn only pays the warm-up, not a cold profile.
+STANDBY_NODES = (
+    NodeProfile("standby-a", chips=64, capability=1.00, available=False),
+    NodeProfile("standby-b", chips=48, capability=0.90, available=False),
+)
+
+
+def cluster_nodes(num_standby: int = 0) -> List[NodeProfile]:
+    """Fresh copies of the default cluster + the first ``num_standby``
+    standby slices (callers mutate NodeProfile, so never share instances)."""
+    assert 0 <= num_standby <= len(STANDBY_NODES), (
+        f"at most {len(STANDBY_NODES)} standby nodes available")
+    base = [NodeProfile(n.name, n.chips, n.capability, n.available)
+            for n in DEFAULT_NODES]
+    base += [NodeProfile(n.name, n.chips, n.capability, n.available)
+             for n in STANDBY_NODES[:num_standby]]
+    return base
 
 
 @dataclasses.dataclass
@@ -60,6 +81,17 @@ class SimBackend:
 
     def clear_stragglers(self):
         self.stragglers.clear()
+
+    def predicted_time(self, a: "Assignment") -> float:
+        """Deterministic service-time *prediction* for one share: table
+        throughput with the current straggler derate, but no noise draw.
+        Used by queue-backlog estimation (admission / autoscaling signals)
+        so reading the signal never perturbs the RNG stream that the
+        actual executions consume."""
+        j = self._node_idx[a.node]
+        perf = self.table.perf[a.apx_level, j]
+        perf *= self.stragglers.get(a.node, 1.0)
+        return a.items / max(perf, 1e-9)
 
     def assignment_time(self, a: "Assignment") -> float:
         """Service time of one node's share (straggler + noise applied).

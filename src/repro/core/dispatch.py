@@ -18,8 +18,7 @@ exactly as in the paper.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional
 
 import numpy as np
 

@@ -14,7 +14,7 @@ This is the single data structure the Dispatch Policy reads.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -90,6 +90,10 @@ class ProfilingTable:
                     self.perf[i, j] = analytic_throughput(
                         v.config, seq_len, node.chips, node.capability)
         self.accuracies = np.asarray(pool.accuracies)
+        # pristine copy: what a fresh PROFILE of each node would measure.
+        # reprofile_node restores from it when a node (re)joins the serving
+        # set, erasing stale runtime decay (straggler EWMA) from a past life.
+        self._pristine = self.perf.copy()
 
     @property
     def num_levels(self) -> int:
@@ -100,12 +104,20 @@ class ProfilingTable:
         return self.perf.shape[1]
 
     def update_node(self, j: int, column: np.ndarray):
-        """NetCom state: merge a (re-)profiled column from node j."""
+        """NetCom state: merge a (re-)profiled column from node j. A
+        profiled column is ground truth, so the pristine copy tracks it."""
         self.perf[:, j] = column
+        self._pristine[:, j] = column
 
     def scale_node(self, j: int, factor: float):
         """Straggler mitigation: EWMA capability decay observed at runtime."""
         self.perf[:, j] *= factor
+
+    def reprofile_node(self, j: int):
+        """Re-run node j's PROFILE step on (re)join: restore the pristine
+        measured/analytic column so stale EWMA decay does not outlive the
+        node's previous membership."""
+        self.perf[:, j] = self._pristine[:, j]
 
     def available_columns(self, avail: Sequence[bool]) -> np.ndarray:
         return self.perf[:, np.asarray(avail, dtype=bool)]

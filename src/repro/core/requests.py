@@ -8,7 +8,7 @@ requirement ``acc_req`` (%). The queue at the gateway node is a vector of
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +30,20 @@ class InferenceRequest:
         if self.perf_req > 0:
             return self.num_items / self.perf_req
         return float("inf")
+
+    def degraded(self, perf_req: float, acc_floor: float) -> "InferenceRequest":
+        """Renegotiated copy for a degraded admission: the gateway raises
+        the effective throughput requirement (forcing the dispatch policy
+        onto coarser apx levels) and relaxes ``acc_req`` down to what the
+        deepest variant can deliver. The deadline budget is *frozen* at
+        the original value — raising perf_req must not silently shrink a
+        derived budget; degraded service still aims at the original
+        latency target."""
+        budget = self.latency_budget_s
+        return dataclasses.replace(
+            self, perf_req=max(self.perf_req, perf_req),
+            acc_req=min(self.acc_req, acc_floor),
+            deadline_s=budget if budget != float("inf") else self.deadline_s)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,10 +13,9 @@ beyond-paper straggler EWMA decay.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import enum
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -43,7 +42,9 @@ class LNState(enum.Enum):
 
 @dataclasses.dataclass
 class Event:
-    kind: str                 # "workload" | "disconnect" | "reconnect" | "straggler"
+    # "workload" | "disconnect" | "reconnect" | "straggler"
+    # | "spawn" | "retire"  (autoscaler membership changes)
+    kind: str
     request: Optional[InferenceRequest] = None
     node: Optional[str] = None
     slowdown: float = 1.0
@@ -134,6 +135,18 @@ class GatewayNode:
             return None
         if ev.kind == "straggler":
             self.backend.set_straggler(ev.node, ev.slowdown)
+            return None
+        if ev.kind == "spawn":
+            # autoscaler scale-up: the node re-runs PROFILE on join so the
+            # dispatch policy sees a fresh column, then enters the set
+            names = [n.name for n in self.table.nodes]
+            self.table.reprofile_node(names.index(ev.node))
+            self._set_available(ev.node, True)
+            return None
+        if ev.kind == "retire":
+            # autoscaler scale-down: leave the serving set; in-flight and
+            # queued shares drain (the caller keeps the queue running)
+            self._set_available(ev.node, False)
             return None
         raise ValueError(ev.kind)
 

@@ -20,10 +20,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 from repro.configs import ModelConfig
-from repro.configs.base import MoEConfig
 
 # paper's MobileNetV2 alpha ladder accuracy endpoints (top-5 %)
 ACC_MAX = 92.5

@@ -1,0 +1,1 @@
+"""data subpackage of the repro reproduction."""

@@ -12,10 +12,9 @@ structure (the ~100M example's loss drops well below uniform entropy).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 

@@ -1,0 +1,1 @@
+"""distributed subpackage of the repro reproduction."""

@@ -1,0 +1,1 @@
+"""launch subpackage of the repro reproduction."""

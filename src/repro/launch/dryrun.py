@@ -49,7 +49,6 @@ from repro.distributed.ctx import use_sharding_rules
 from repro.launch.inputs import input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as model_lib
-from repro.models import transformer as tfm
 from repro.roofline import analysis as roofline
 from repro.train import train_step as ts
 

@@ -5,7 +5,7 @@ dry-run lowers against (weak-type-correct, shardable).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

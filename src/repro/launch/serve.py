@@ -15,7 +15,6 @@ import time
 from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config

@@ -15,8 +15,6 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config

@@ -10,7 +10,7 @@ The einsum implementation here is the reference; the Pallas kernels in
 from __future__ import annotations
 
 import math
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,7 +121,6 @@ def gqa_attention_decode(cfg: ModelConfig, p, x: jax.Array,
                          use_kernel: bool = False) -> Tuple[jax.Array, KVCache]:
     """One-token decode. x: (B, 1, d_model); lengths: (B,) tokens already in
     cache (the new token's absolute position)."""
-    b = x.shape[0]
     s_cache = cache.k.shape[1]
     window = None
     if cfg.attention_kind == "sliding" or (

@@ -6,7 +6,6 @@ prepended to the token embeddings; positions cover the concatenated stream.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -11,7 +11,6 @@ sequence length, which is exactly why these archs run the long_500k cell.
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, NamedTuple, Tuple
 
 import jax
@@ -55,7 +54,6 @@ def _mamba_inner(cfg, p, xz, conv_state):
     xz: (B, S, 2*d_in); conv_state: (B, d_conv-1, d_in).
     Returns (u, dt, Bm, Cm, z, new_conv_state)."""
     s = cfg.ssm
-    d_in = s.expand * cfg.d_model
     r = _dt_rank(cfg)
     x_part, z = jnp.split(xz, 2, axis=-1)
 
@@ -82,9 +80,7 @@ def mamba_apply_dense(cfg: ModelConfig, p: ParamTree, x: jax.Array,
 
     ``use_kernel`` routes the recurrence through the Pallas ssm_scan kernel
     (fresh state only — the engine always prefills from scratch)."""
-    s = cfg.ssm
     b, seq, d = x.shape
-    d_in = s.expand * d
     fresh = state is None
     if state is None:
         state = init_mamba_state(cfg, b, dtype=x.dtype)
@@ -202,8 +198,9 @@ def rwkv_time_mix(cfg: ModelConfig, p: ParamTree, x: jax.Array,
 
     if use_kernel and seq > 1:
         from repro.kernels import ops as kops
-        fold = lambda t: t.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
-            b * nh, seq, hd)
+        def fold(t):
+            return t.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(
+                b * nh, seq, hd)
         u_bh = jnp.broadcast_to(u[None], (b, nh, hd)).reshape(b * nh, hd)
         y_bh, s_bh = kops.rwkv6_wkv(fold(r), fold(k), fold(v), fold(w), u_bh)
         y = y_bh.reshape(b, nh, seq, hd).transpose(0, 2, 1, 3).reshape(

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -300,7 +300,6 @@ def group_apply(cfg: ModelConfig, group: Group, params_stacked, x, positions,
     trip count — unrolling makes the roofline terms correct and lets XLA
     fuse across layer boundaries. Production training keeps unroll=1 for
     bounded compile time."""
-    n_aux = sum(1 for sl in group.pattern if sl.mlp == "moe" and mode == "dense")
 
     def unit(carry, scanned):
         x, aux_sum = carry

@@ -1,0 +1,1 @@
+"""roofline subpackage of the repro reproduction."""

@@ -1,0 +1,1 @@
+"""serving subpackage of the repro reproduction."""

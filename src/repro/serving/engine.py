@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,6 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn_lib
 from repro.models import model as model_lib
-from repro.models import ssm as ssm_lib
 from repro.models import transformer as tfm
 
 

@@ -2,21 +2,25 @@
 
 Public surface:
   * events      — SimClock, EventQueue, SimEvent
-  * arrivals    — PoissonArrivals, DiurnalArrivals, TraceArrivals,
-                  RequestSampler
+  * arrivals    — PoissonArrivals, DiurnalArrivals, BurstArrivals,
+                  TraceArrivals, RequestSampler
   * simulator   — OnlineSimulator, TimedFault, RequestRecord, SimReport
   * scenarios   — Scenario, build_scenario, SCENARIOS + builders
+
+The closed-loop gateway controls (AdmissionController, Autoscaler) live in
+``repro.control`` and plug into OnlineSimulator via its ``admission`` /
+``autoscaler`` constructor args.
 """
-from repro.sim.arrivals import (ArrivalProcess, DiurnalArrivals,
-                                PoissonArrivals, RequestSampler,
-                                TraceArrivals)
+from repro.sim.arrivals import (ArrivalProcess, BurstArrivals,
+                                DiurnalArrivals, PoissonArrivals,
+                                RequestSampler, TraceArrivals)
 from repro.sim.events import EventQueue, SimClock, SimEvent
 from repro.sim.scenarios import SCENARIOS, Scenario, build_scenario
 from repro.sim.simulator import (OnlineSimulator, RequestRecord, SimReport,
                                  TimedFault)
 
 __all__ = [
-    "ArrivalProcess", "DiurnalArrivals", "PoissonArrivals",
+    "ArrivalProcess", "BurstArrivals", "DiurnalArrivals", "PoissonArrivals",
     "RequestSampler", "TraceArrivals", "EventQueue", "SimClock", "SimEvent",
     "SCENARIOS", "Scenario", "build_scenario", "OnlineSimulator",
     "RequestRecord", "SimReport", "TimedFault",

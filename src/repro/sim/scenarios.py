@@ -18,13 +18,12 @@ Use :func:`build_scenario` / ``SCENARIOS`` for name-based lookup
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.profiling import ProfilingTable
-from repro.core.requests import InferenceRequest
-from repro.sim.arrivals import (Arrival, ArrivalProcess, DiurnalArrivals,
+from repro.sim.arrivals import (Arrival, BurstArrivals, DiurnalArrivals,
                                 PoissonArrivals, RequestSampler,
                                 TraceArrivals)
 from repro.sim.simulator import TimedFault
@@ -44,10 +43,14 @@ def _rate_for_load(table: ProfilingTable, sampler: RequestSampler,
                    load: float) -> float:
     """Requests/s such that offered work ~= load x full-accuracy capacity.
 
-    Capacity is the level-0 cluster throughput (items/s); the mean request
-    carries mean(item_choices) items.
+    Capacity is the level-0 throughput (items/s) of the *available* nodes
+    — standby slices waiting on the autoscaler don't serve and must not
+    dilute the load factor; the mean request carries mean(item_choices)
+    items.
     """
-    capacity = table.perf[0].sum()
+    cols = [j for j, n in enumerate(table.nodes) if n.available]
+    cols = cols or list(range(table.num_nodes))
+    capacity = table.perf[0, cols].sum()
     mean_items = float(np.mean(sampler.item_choices))
     return load * capacity / mean_items
 
@@ -86,7 +89,8 @@ def node_churn(table: ProfilingTable, *, seed: int = 0,
     re-DISTRIBUTEs the affected in-flight requests over the survivors."""
     sampler = sampler or RequestSampler(table)
     rate = _rate_for_load(table, sampler, load)
-    names = [n.name for n in table.nodes]
+    # faults hit *serving* nodes — a standby slice can't disconnect
+    names = [n.name for n in table.nodes if n.available]
     victims = [names[-1], names[-2] if len(names) > 1 else names[-1]]
     return Scenario(
         name="node-churn",
@@ -112,7 +116,7 @@ def straggler_storm(table: ProfilingTable, *, seed: int = 0,
     ``slowdown`` x its profiled perf for a window, then recovers."""
     sampler = sampler or RequestSampler(table)
     rate = _rate_for_load(table, sampler, load)
-    names = [n.name for n in table.nodes]
+    names = [n.name for n in table.nodes if n.available]
     window = horizon_s / (len(names) + 1)
     faults: List[TimedFault] = []
     for i, n in enumerate(names):
@@ -126,6 +130,49 @@ def straggler_storm(table: ProfilingTable, *, seed: int = 0,
         description=f"rolling {slowdown:g}x slowdowns, one node at a time",
         arrivals=PoissonArrivals(rate, horizon_s, sampler, seed).generate(),
         faults=faults, horizon_s=horizon_s)
+
+
+def overload(table: ProfilingTable, *, seed: int = 0,
+             horizon_s: float = 60.0, load: float = 1.6,
+             sampler: Optional[RequestSampler] = None) -> Scenario:
+    """Sustained saturation: Poisson arrivals at ``load`` > 1 x the active
+    cluster's full-accuracy capacity. Without admission control every
+    policy's queues grow without bound (backlog paid in p99); with the
+    closed-loop gateway the excess is shed/degraded and standby slices
+    spawn."""
+    assert load > 1.0, "overload means offered > capacity; use steady below"
+    sampler = sampler or RequestSampler(table)
+    rate = _rate_for_load(table, sampler, load)
+    return Scenario(
+        name="overload",
+        description=f"sustained Poisson at {load:.0%} of active capacity "
+                    f"({rate:.2f} req/s) for {horizon_s:.0f}s",
+        arrivals=PoissonArrivals(rate, horizon_s, sampler, seed).generate(),
+        faults=[], horizon_s=horizon_s)
+
+
+def flash_crowd(table: ProfilingTable, *, seed: int = 0,
+                horizon_s: float = 90.0, base_load: float = 0.4,
+                peak_load: float = 2.5, burst_start_frac: float = 1 / 3,
+                burst_len_frac: float = 1 / 6,
+                sampler: Optional[RequestSampler] = None) -> Scenario:
+    """Quiet traffic with a sudden rectangular burst far above capacity —
+    the scale-up-latency stressor: the autoscaler must spot the spike,
+    pay the warm-up, and drain before the deadline budget of the burst's
+    tail is gone; admission sheds what the warm-up window cannot save."""
+    sampler = sampler or RequestSampler(table)
+    base = _rate_for_load(table, sampler, base_load)
+    peak = _rate_for_load(table, sampler, peak_load)
+    t0 = horizon_s * burst_start_frac
+    t1 = t0 + horizon_s * burst_len_frac
+    return Scenario(
+        name="flash-crowd",
+        description=f"{base_load:.0%} base load with a "
+                    f"{peak_load:.0%}-of-capacity burst in "
+                    f"[{t0:.0f}s, {t1:.0f}s)",
+        arrivals=BurstArrivals(base, peak, t0, t1, horizon_s, sampler,
+                               seed).generate(),
+        faults=[], horizon_s=horizon_s)
 
 
 def trace(table: ProfilingTable, arrivals: Sequence[Arrival],
@@ -143,6 +190,8 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "diurnal": diurnal,
     "node-churn": node_churn,
     "straggler-storm": straggler_storm,
+    "overload": overload,
+    "flash-crowd": flash_crowd,
 }
 
 

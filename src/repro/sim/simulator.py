@@ -11,13 +11,23 @@ now happening *during* execution instead of between manual calls).
 
 Per-request accounting: arrival -> dispatch -> per-share queue wait ->
 last-share completion; deadline = the request's ``latency_budget_s``.
+
+Closed-loop control (optional): an ``AdmissionController`` gates every
+arrival against the token bucket and an SLO-feasibility estimate built
+from live queue backlogs (reject / degrade / admit), and an ``Autoscaler``
+spawns/retires standby worker groups on queue-depth and deadline-violation
+signals — spawns become serveable after a warm-up (``node_up`` event) and
+trigger a re-PROFILE of the joining node's table column.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.control.admission import (ADMIT, DEGRADE, REJECT,
+                                     AdmissionController)
+from repro.control.autoscaler import RETIRE, SPAWN, Autoscaler, ScalingAction
 from repro.core.requests import (Assignment, Dispatch, ExecutionResult,
                                  InferenceRequest, violation_summary)
 from repro.core.resource_manager import Event, GatewayNode
@@ -47,7 +57,12 @@ class _Share:
 
 
 class _NodeQueue:
-    """FIFO work queue + single-server execution model for one node."""
+    """FIFO work queue + single-server execution model for one node.
+
+    Beyond executing, the queue is a *sensor*: it reports depth, backlog
+    seconds, and oldest-share age — the signals the admission controller
+    and autoscaler feed on.
+    """
 
     def __init__(self, name: str):
         self.name = name
@@ -57,6 +72,30 @@ class _NodeQueue:
 
     def drop_rid(self, rid: int):
         self.queue = collections.deque(s for s in self.queue if s.rid != rid)
+
+    # ---- control-loop signals ---------------------------------------
+    def depth(self) -> int:
+        """Shares on this node (running + queued)."""
+        return len(self.queue) + (1 if self.running is not None else 0)
+
+    def backlog_s(self, now: float,
+                  predictor: Callable[[Assignment], float]) -> float:
+        """Predicted seconds of work ahead of a share enqueued now: the
+        running share's remaining time plus every queued share's predicted
+        service time (noise-free, so reading the signal is side-effect
+        free)."""
+        total = 0.0
+        if self.running is not None:
+            total += max(0.0, self.running.finish_s - now)
+        for s in self.queue:
+            total += predictor(s.assignment)
+        return total
+
+    def oldest_age_s(self, now: float) -> float:
+        """Age of the oldest waiting share (0 when the queue is empty)."""
+        if not self.queue:
+            return 0.0
+        return max(0.0, now - self.queue[0].enqueue_s)
 
 
 @dataclasses.dataclass
@@ -70,11 +109,20 @@ class RequestRecord:
     queue_wait_s: float = 0.0         # max share wait of the final dispatch
     redistributed: int = 0            # disconnect-triggered re-dispatches
     result: Optional[ExecutionResult] = None
+    # admission outcome
+    rejected: bool = False            # shed at the gateway, never dispatched
+    reject_reason: str = ""
+    degraded_admission: bool = False  # admitted with a renegotiated SLO
+    effective_request: Optional[InferenceRequest] = None  # degraded copy
     # internal scheduling state
     epoch: int = 0
     pending_shares: int = 0
     dispatch: Optional[Dispatch] = None
     per_node_time: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def admitted(self) -> bool:
+        return not self.rejected
 
     @property
     def done(self) -> bool:
@@ -98,16 +146,41 @@ class SimReport:
     horizon_s: float
     records: List[RequestRecord]
     log: List[str]
+    scaling: List[ScalingAction] = dataclasses.field(default_factory=list)
+    admission_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    end_s: float = 0.0                # sim clock when the last event fired
 
     def summary(self) -> Dict[str, float]:
-        done = [r.result for r in self.records if r.done]
+        """Aggregate metrics. Latency / deadline metrics cover *admitted*
+        requests only (a shed request has no latency); rejected load shows
+        up in ``shed_rate`` and in goodput's denominator instead, so
+        shedding cannot masquerade as a latency win for free."""
+        admitted = [r for r in self.records if r.admitted]
+        done = [r.result for r in admitted if r.done]
         s = violation_summary(done)
-        n = max(len(self.records), 1)
+        n_adm = max(len(admitted), 1)
+        rejected = len(self.records) - len(admitted)
+        span = max(self.end_s, self.horizon_s, 1e-12)
         s["completed"] = float(len(done))
         s["offered"] = float(len(self.records))
+        s["admitted"] = float(len(admitted))
+        s["rejected"] = float(rejected)
+        s["shed_rate"] = rejected / max(len(self.records), 1)
+        s["degraded"] = float(
+            sum(r.degraded_admission for r in self.records))
         s["deadline_violation_rate"] = (
-            sum(not r.meets_deadline for r in self.records) / n)
+            sum(not r.meets_deadline for r in admitted) / n_adm)
+        # goodput: admitted requests that completed within deadline, per
+        # sim-second of the whole run (drain included)
+        s["goodput_rps"] = sum(
+            r.meets_deadline for r in admitted) / span
         s["redistributes"] = float(sum(r.redistributed for r in self.records))
+        spawns = [a for a in self.scaling if a.kind == SPAWN]
+        lat = [a.ready_s - a.decided_s for a in spawns]
+        s["scale_ups"] = float(len(spawns))
+        s["scale_downs"] = float(
+            sum(a.kind == RETIRE for a in self.scaling))
+        s["mean_scale_up_latency_s"] = (sum(lat) / len(lat)) if lat else 0.0
         return s
 
 
@@ -122,9 +195,13 @@ class OnlineSimulator:
     def __init__(self, gn: GatewayNode,
                  arrivals: Sequence[Tuple[float, InferenceRequest]],
                  faults: Sequence[TimedFault] = (),
-                 scenario: str = "custom", horizon_s: float = 0.0):
+                 scenario: str = "custom", horizon_s: float = 0.0,
+                 admission: Optional[AdmissionController] = None,
+                 autoscaler: Optional[Autoscaler] = None):
         self.gn = gn
         self.backend = gn.backend
+        self.admission = admission
+        self.autoscaler = autoscaler
         self.clock = SimClock()
         self.events = EventQueue()
         self.nodes: Dict[str, _NodeQueue] = {
@@ -170,7 +247,12 @@ class OnlineSimulator:
                          horizon_s=self.horizon_s,
                          records=[self.records[k]
                                   for k in sorted(self.records)],
-                         log=self.log)
+                         log=self.log,
+                         scaling=(list(self.autoscaler.actions)
+                                  if self.autoscaler else []),
+                         admission_counts=(dict(self.admission.counts)
+                                           if self.admission else {}),
+                         end_s=self.clock.now)
 
     def _handle(self, ev: SimEvent):
         now = self.clock.now
@@ -178,9 +260,16 @@ class OnlineSimulator:
             req: InferenceRequest = ev.payload["request"]
             rec = RequestRecord(request=req, arrival_s=req.arrival_s)
             self.records[req.rid] = rec
-            self._dispatch(rec, now)
+            # one backlog scan per event, shared by both controllers
+            backlogs = (self._backlogs(now) if self.admission is not None
+                        or self._autoscaler_ready(now) else None)
+            self._admit(rec, now, backlogs)
+            self._autoscale_tick(now, backlogs)
         elif ev.kind == "share_done":
             self._share_done(ev.payload["node"], ev.payload["share_id"])
+            self._autoscale_tick(now, None)
+        elif ev.kind == "node_up":
+            self._node_up(ev.payload["node"])
         elif ev.kind == "disconnect":
             self._disconnect(ev.payload["node"])
         elif ev.kind == "reconnect":
@@ -195,11 +284,88 @@ class OnlineSimulator:
         else:
             raise ValueError(f"unknown sim event kind: {ev.kind}")
 
+    # ---- closed-loop control ----------------------------------------
+    def _backlogs(self, now: float) -> Dict[str, float]:
+        """Per-node backlog seconds, the shared control-loop signal."""
+        return {name: nq.backlog_s(now, self.backend.predicted_time)
+                for name, nq in self.nodes.items()}
+
+    def _admit(self, rec: RequestRecord, now: float,
+               backlogs: Optional[Dict[str, float]]):
+        """Admission gate in front of DISTRIBUTE; absent a controller
+        every request is admitted unchanged (PR 1 behaviour)."""
+        if self.admission is None:
+            self._dispatch(rec, now)
+            return
+        decision = self.admission.decide(rec.request, now,
+                                         backlogs or {})
+        if decision.outcome == REJECT:
+            rec.rejected = True
+            rec.reject_reason = decision.reason
+            if self.autoscaler is not None:
+                # a shed is a failed SLO: it must push the autoscaler
+                # toward capacity even though no queue ever saw it
+                self.autoscaler.record_outcome(False)
+            self._log(f"rid={rec.request.rid} REJECTED "
+                      f"({decision.reason}, est_wait="
+                      f"{decision.est_wait_s:.3f}s)")
+            return
+        if decision.outcome == DEGRADE:
+            rec.degraded_admission = True
+            rec.effective_request = decision.request
+            self._log(f"rid={rec.request.rid} admitted DEGRADED "
+                      f"(perf_req {rec.request.perf_req:.1f}->"
+                      f"{decision.request.perf_req:.1f} items/s)")
+        else:
+            assert decision.outcome == ADMIT
+        self._dispatch(rec, now)
+
+    def _autoscaler_ready(self, now: float) -> bool:
+        return self.autoscaler is not None and self.autoscaler.ready(now)
+
+    def _autoscale_tick(self, now: float,
+                        backlogs: Optional[Dict[str, float]]):
+        """Evaluate the autoscaler, reusing the event's backlog scan when
+        one was already built; skip the scan entirely while the cooldown
+        / warm-up guard would discard it unread."""
+        if not self._autoscaler_ready(now):
+            return
+        if backlogs is None:
+            backlogs = self._backlogs(now)
+        action = self.autoscaler.evaluate(now, backlogs)
+        if action is None:
+            return
+        if action.kind == SPAWN:
+            self._log(f"scale-up decided node={action.node} "
+                      f"ready at t={action.ready_s:.3f}s ({action.reason})")
+            self.events.push(action.ready_s, "node_up", node=action.node)
+        else:
+            self._log(f"scale-down node={action.node} ({action.reason})")
+            # leave the serving set now; already-queued shares drain
+            self.gn.handle(Event(kind="retire", node=action.node, time=now))
+
+    def _node_up(self, node: str):
+        """A spawned node finished warming up: PROFILE + join + serve."""
+        now = self.clock.now
+        self.gn.handle(Event(kind="spawn", node=node, time=now))
+        if self.autoscaler is not None:
+            self.autoscaler.on_ready(node)
+        nq = self.nodes[node]
+        nq.up = True
+        self._log(f"node_up node={node} (warmed up, re-profiled)")
+        self._maybe_start(nq)
+        parked, self._parked = self._parked, []
+        for req in parked:
+            self._log(f"rid={req.rid} re-admitted after scale-up")
+            self._dispatch(self.records[req.rid], now)
+
     # ---- dispatch & execution ---------------------------------------
     def _dispatch(self, rec: RequestRecord, now: float):
-        """GN re-enters DISTRIBUTE for this request; shares hit the queues."""
+        """GN re-enters DISTRIBUTE for this request; shares hit the queues.
+        A degraded admission dispatches its renegotiated copy (higher
+        perf_req -> coarser apx levels), never the original."""
         try:
-            d = self.gn.plan(rec.request)
+            d = self.gn.plan(rec.effective_request or rec.request)
         except RuntimeError:
             # every node down: park until a reconnect re-admits it
             self._parked.append(rec.request)
@@ -264,8 +430,11 @@ class OnlineSimulator:
         makespan = max(now - rec.dispatch_s, 1e-12)
         exec_makespan = max(rec.per_node_time.values(), default=1e-12)
         total = d.total_items
+        # account against the *dispatched* request: for a degraded
+        # admission that is the renegotiated contract (raised perf_req,
+        # relaxed acc_req), so SLO metrics reflect what was promised
         result = ExecutionResult(
-            request=rec.request, policy=d.policy,
+            request=d.request, policy=d.policy,
             achieved_perf=total / max(exec_makespan, 1e-12),
             achieved_acc=self.backend.dispatch_accuracy(d),
             makespan_s=makespan, per_node_time=dict(rec.per_node_time),
@@ -273,6 +442,8 @@ class OnlineSimulator:
             finish_s=now, queue_wait_s=rec.queue_wait_s)
         rec.result = result
         self.gn.complete(d, result)
+        if self.autoscaler is not None:
+            self.autoscaler.record_outcome(rec.meets_deadline)
         self._log(f"rid={rec.request.rid} done "
                   f"latency={rec.latency_s:.3f}s "
                   f"wait={rec.queue_wait_s:.3f}s "

@@ -44,7 +44,8 @@ def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
 
 def init_opt_state(cfg: OptimizerConfig, params) -> OptState:
     mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
-    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    def zeros(p):
+        return jnp.zeros(p.shape, mdt)
     return OptState(step=jnp.zeros((), jnp.int32),
                     mu=jax.tree_util.tree_map(zeros, params),
                     nu=jax.tree_util.tree_map(zeros, params))
@@ -52,7 +53,8 @@ def init_opt_state(cfg: OptimizerConfig, params) -> OptState:
 
 def abstract_opt_state(cfg: OptimizerConfig, abstract_params) -> OptState:
     mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
-    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, mdt)
+    def zeros(p):
+        return jax.ShapeDtypeStruct(p.shape, mdt)
     return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
                     mu=jax.tree_util.tree_map(zeros, abstract_params),
                     nu=jax.tree_util.tree_map(zeros, abstract_params))

@@ -2,14 +2,12 @@
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import get_smoke_config
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import run_training
-from repro.train import optimizer as opt_lib
 from repro.train import train_step as ts
 
 

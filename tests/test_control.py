@@ -1,0 +1,247 @@
+"""Closed-loop gateway tests: admission (token bucket + SLO feasibility),
+autoscaling (cooldown, warm-up, re-profiling), and the overload scenario
+shedding load instead of blowing p99 for admitted requests."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control import AdmissionController, Autoscaler, TokenBucket
+from repro.control.admission import ADMIT, DEGRADE, REJECT
+from repro.core.cluster import STANDBY_NODES, SimBackend, cluster_nodes
+from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.requests import InferenceRequest
+from repro.core.resource_manager import Event, GatewayNode
+from repro.core.variants import VariantPool
+from repro.sim import OnlineSimulator, build_scenario
+from repro.sim.arrivals import BurstArrivals, RequestSampler
+from repro.sim.scenarios import trace as trace_scenario
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return VariantPool(get_config("phi4-mini-3.8b"))
+
+
+def _measured_table(pool, caps, standby=()):
+    """Node j's level-0 throughput = caps[j] items/s with a monotone
+    1.0->2.1x level-speedup ladder; names n0, n1, ... ``standby`` marks a
+    subset unavailable (autoscaler pool)."""
+    caps = np.asarray(caps, dtype=np.float64)
+    speed = np.linspace(1.0, 2.1, len(pool))[:, None]
+    nodes = [NodeProfile(f"n{i}", chips=1,
+                         available=f"n{i}" not in standby)
+             for i in range(len(caps))]
+    return ProfilingTable(pool, nodes, measured=caps[None, :] * speed)
+
+
+# ---- token bucket -----------------------------------------------------
+def test_token_bucket_refills_on_sim_clock():
+    b = TokenBucket(rate=1.0, burst=1.0)
+    assert b.try_take(0.0)                 # burst token
+    assert not b.try_take(0.5)             # only 0.5 tokens accrued
+    assert b.try_take(1.5)                 # refilled past 1.0
+    assert not b.try_take(1.6)
+    # burst cap: a long idle stretch cannot bank more than ``burst``
+    b2 = TokenBucket(rate=10.0, burst=2.0)
+    assert b2.peek(100.0) == pytest.approx(2.0)
+    # disabled shaping always grants
+    assert TokenBucket(rate=None).try_take(0.0)
+
+
+def test_admission_rate_limit_uses_sim_clock(pool):
+    table = _measured_table(pool, [100.0])
+    adm = AdmissionController(table, rate=1.0, burst=1.0)
+    req = InferenceRequest(rid=0, num_items=10, perf_req=50.0, acc_req=0.0,
+                           deadline_s=10.0)
+    assert adm.decide(req, 0.0, {}).outcome == ADMIT
+    d = adm.decide(req, 0.1, {})
+    assert d.outcome == REJECT and d.reason == "rate_limited"
+    assert adm.decide(req, 1.5, {}).outcome == ADMIT   # clock refilled
+
+
+# ---- SLO feasibility --------------------------------------------------
+def test_admission_rejects_infeasible_deterministically(pool):
+    """Same request + same queue state => same decision, and requests the
+    deepest approximation cannot save are rejected, not queued."""
+    table = _measured_table(pool, [100.0])      # deepest level: 210 items/s
+    adm = AdmissionController(table)
+    # needs 100 items in 0.2s = 500 items/s > 210 even fully approximated
+    req = InferenceRequest(rid=0, num_items=100, perf_req=100.0,
+                           acc_req=0.0, deadline_s=0.2)
+    for _ in range(3):
+        d = adm.decide(req, 0.0, {"n0": 0.0})
+        assert d.outcome == REJECT
+        assert d.reason == "infeasible_at_max_approximation"
+    # backlog alone can also kill it: budget 1s, queue wait 1.5s
+    slow = InferenceRequest(rid=1, num_items=10, perf_req=100.0,
+                            acc_req=0.0, deadline_s=1.0)
+    d = adm.decide(slow, 0.0, {"n0": 1.5})
+    assert d.outcome == REJECT
+    assert d.reason == "queue_wait_exceeds_budget"
+    assert adm.counts[REJECT] == 4
+
+
+def test_admission_degrades_instead_of_rejecting(pool):
+    """A request feasible only with more approximation than its own
+    perf_req implies is admitted DEGRADED: higher effective perf_req,
+    relaxed acc_req, same deadline."""
+    table = _measured_table(pool, [100.0])
+    adm = AdmissionController(table)
+    # 100 items in 1.0s => needs 100 items/s; level-0 gives only 100*1.0
+    # with backlog 0.2s the remaining budget forces ~125 items/s
+    req = InferenceRequest(rid=0, num_items=100, perf_req=100.0,
+                           acc_req=95.0, deadline_s=1.0)
+    d = adm.decide(req, 0.0, {"n0": 0.2})
+    assert d.outcome == DEGRADE
+    assert d.request.perf_req == pytest.approx(100 / 0.8)
+    assert d.request.acc_req == pytest.approx(
+        float(table.accuracies[-1]))
+    assert d.request.latency_budget_s == pytest.approx(1.0)
+    # with no-degrade policy the same request is shed instead
+    strict = AdmissionController(table, degrade=False)
+    assert strict.decide(req, 0.0, {"n0": 0.2}).outcome == REJECT
+
+
+def test_simulator_marks_rejected_and_degraded_records(pool):
+    """End-to-end through OnlineSimulator: an infeasible arrival becomes a
+    rejected record (never dispatched), a tight one a degraded record."""
+    table = _measured_table(pool, [100.0])
+    r_ok = InferenceRequest(rid=0, num_items=50, perf_req=80.0, acc_req=0.0,
+                            arrival_s=0.0, deadline_s=10.0)
+    # back-to-back with r_ok's ~0.5s service: infeasible within 0.05s
+    r_bad = InferenceRequest(rid=1, num_items=100, perf_req=100.0,
+                             acc_req=0.0, arrival_s=0.01, deadline_s=0.05)
+    sc = trace_scenario(table, [(0.0, r_ok), (0.01, r_bad)])
+    gn = GatewayNode(table, SimBackend(table), policy="proportional")
+    rep = OnlineSimulator(gn, sc.arrivals, sc.faults,
+                          admission=AdmissionController(table)).run()
+    rec_ok, rec_bad = rep.records
+    assert rec_ok.done and rec_ok.admitted
+    assert rec_bad.rejected and not rec_bad.done
+    assert rec_bad.dispatch is None       # the GN never planned it
+    s = rep.summary()
+    assert s["offered"] == 2 and s["admitted"] == 1
+    assert s["shed_rate"] == pytest.approx(0.5)
+    assert rep.admission_counts[REJECT] == 1
+    assert any("REJECTED" in line for line in rep.log)
+
+
+# ---- autoscaler -------------------------------------------------------
+def test_autoscaler_cooldown_and_reprofile_on_scale_up(pool):
+    table = _measured_table(pool, [100.0, 80.0], standby=("n1",))
+    gn = GatewayNode(table, SimBackend(table))
+    gn.startup()          # PROFILE: pristine columns recorded
+    asc = Autoscaler(table, ["n1"], scale_up_backlog_s=0.5,
+                     scale_down_backlog_s=0.05, cooldown_s=5.0,
+                     warmup_s=2.0)
+    # stale decay from a previous life: n1's column is half its pristine
+    table.scale_node(1, 0.5)
+    decayed = table.perf[:, 1].copy()
+
+    a = asc.evaluate(0.0, {"n0": 1.0, "n1": 0.0})
+    assert a is not None and a.kind == "spawn" and a.node == "n1"
+    assert a.ready_s == pytest.approx(2.0)
+    # no second action while the spawn is pending / cooling down
+    assert asc.evaluate(0.1, {"n0": 9.9}) is None
+    # node_up: the GN's spawn handler owns PROFILE-on-join, the
+    # autoscaler just does bookkeeping (simulator fires both together)
+    gn.handle(Event(kind="spawn", node="n1", time=2.0))
+    asc.on_ready("n1")
+    # re-profiled on join: pristine column restored, decay erased
+    assert np.all(table.perf[:, 1] > decayed)
+    assert table.perf[0, 1] == pytest.approx(80.0)
+    assert table.nodes[1].available
+    # still inside the 5s cooldown
+    assert asc.evaluate(3.0, {"n0": 9.9, "n1": 9.9}) is None
+    # after cooldown + calm signals: the spawned node retires (LIFO)
+    r = asc.evaluate(6.0, {"n0": 0.0, "n1": 0.0})
+    assert r is not None and r.kind == "retire" and r.node == "n1"
+    assert "n1" in asc.standby            # back in the pool
+    s = asc.summary()
+    assert s["scale_ups"] == 1 and s["scale_downs"] == 1
+    assert s["mean_scale_up_latency_s"] == pytest.approx(2.0)
+
+
+def test_autoscaler_violation_window_needs_min_samples(pool):
+    table = _measured_table(pool, [100.0, 80.0], standby=("n1",))
+    asc = Autoscaler(table, ["n1"], min_window=8)
+    asc.record_outcome(False)             # one early shed
+    assert asc.violation_rate() == 0.0    # not enough evidence yet
+    for _ in range(7):
+        asc.record_outcome(False)
+    assert asc.violation_rate() == 1.0
+
+
+def test_spawned_node_serves_after_warmup(pool):
+    """Simulator end-to-end: overload spawns the standby node, which then
+    executes shares (its per-node time shows up in later results)."""
+    pool_nodes = cluster_nodes(num_standby=1)
+    table = ProfilingTable(VariantPool(get_config("phi4-mini-3.8b")),
+                           pool_nodes, seq_len=512)
+    sc = build_scenario("overload", table, seed=0, horizon_s=10.0)
+    gn = GatewayNode(table, SimBackend(table), policy="proportional")
+    asc = Autoscaler(table, ["standby-a"])
+    rep = OnlineSimulator(gn, sc.arrivals, sc.faults, scenario=sc.name,
+                          horizon_s=sc.horizon_s,
+                          admission=AdmissionController(table),
+                          autoscaler=asc).run()
+    s = rep.summary()
+    assert s["scale_ups"] >= 1
+    assert any(a.kind == "spawn" and a.node == "standby-a"
+               for a in rep.scaling)
+    assert any("node_up node=standby-a" in line for line in rep.log)
+    served = [r for r in rep.records if r.done
+              and "standby-a" in r.result.per_node_time]
+    assert served, "spawned node never executed a share"
+    ready = next(a.ready_s for a in rep.scaling if a.kind == "spawn")
+    assert all(r.finish_s >= ready for r in served)
+
+
+# ---- overload scenario ------------------------------------------------
+def test_overload_sheds_instead_of_blowing_admitted_p99(pool):
+    """Acceptance: same seed, same arrivals — with admission + autoscaling
+    the deadline-violation rate for admitted requests is strictly lower
+    than the no-control baseline, excess load is shed (not silently
+    queued), and goodput rises."""
+    arch_pool = VariantPool(get_config("phi4-mini-3.8b"))
+
+    def run(control):
+        table = ProfilingTable(arch_pool, cluster_nodes(num_standby=2),
+                               seq_len=512)
+        sc = build_scenario("overload", table, seed=0, horizon_s=10.0)
+        gn = GatewayNode(table, SimBackend(table), policy="proportional")
+        adm = AdmissionController(table) if control else None
+        asc = (Autoscaler(table, [n.name for n in STANDBY_NODES[:2]])
+               if control else None)
+        return OnlineSimulator(gn, sc.arrivals, sc.faults,
+                               scenario=sc.name, horizon_s=sc.horizon_s,
+                               admission=adm, autoscaler=asc).run()
+
+    base = run(False).summary()
+    ctl = run(True).summary()
+    # same offered load (identical seeded trace)
+    assert base["offered"] == ctl["offered"] > 0
+    # baseline admits everything and melts down
+    assert base["shed_rate"] == 0.0
+    assert base["deadline_violation_rate"] > 0.9
+    # control sheds rather than queueing...
+    assert ctl["shed_rate"] > 0.0
+    # ...and the requests it *does* admit get served in time
+    assert (ctl["deadline_violation_rate"]
+            < base["deadline_violation_rate"])
+    assert ctl["p99_latency_s"] < base["p99_latency_s"]
+    assert ctl["goodput_rps"] > base["goodput_rps"]
+
+
+# ---- flash-crowd arrivals --------------------------------------------
+def test_burst_arrivals_deterministic_and_bursty(pool):
+    table = _measured_table(pool, [100.0, 100.0])
+    sampler = RequestSampler(table)
+    proc = BurstArrivals(2.0, 20.0, 10.0, 20.0, 30.0, sampler, seed=5)
+    a1, a2 = proc.generate(), proc.generate()
+    assert [t for t, _ in a1] == [t for t, _ in a2]
+    in_burst = sum(1 for t, _ in a1 if 10.0 <= t < 20.0)
+    outside = len(a1) - in_burst
+    # 10s at 20 req/s vs 20s at 2 req/s: the burst window dominates
+    assert in_burst > outside
+    assert all(r.arrival_s == t for t, r in a1)

@@ -9,7 +9,7 @@ from repro.core.dispatch import (POLICIES, asymmetric, exact_oracle,
                                  proportional, uniform, uniform_apx)
 from repro.core.profiling import NodeProfile, ProfilingTable
 from repro.core.requests import InferenceRequest
-from repro.core.resource_manager import Event, GatewayNode, GNState
+from repro.core.resource_manager import Event, GatewayNode
 from repro.core.variants import VariantPool
 
 
@@ -136,7 +136,7 @@ def test_disconnect_redistribution(table):
     assert r_all.meets_perf
 
     gn.handle(Event(kind="disconnect", node="slice-d"))
-    r3 = gn.handle(Event(kind="workload", request=req))
+    gn.handle(Event(kind="workload", request=req))
     d3 = gn.dispatches[-1]
     assert all(a.node != "slice-d" for a in d3.assignments)
     # survivors approximate more (or equal) to compensate
@@ -145,7 +145,7 @@ def test_disconnect_redistribution(table):
     assert mean_lvl_after >= mean_lvl_before
 
     gn.handle(Event(kind="reconnect", node="slice-d"))
-    r4 = gn.handle(Event(kind="workload", request=req))
+    gn.handle(Event(kind="workload", request=req))
     assert any(a.node == "slice-d" for a in gn.dispatches[-1].assignments)
 
 
@@ -168,7 +168,6 @@ def test_straggler_feedback(table):
     gn.startup()
     req = _req(table, 0.3)
     gn.handle(Event(kind="straggler", node="slice-a", slowdown=0.5))
-    d1 = None
     share_before = None
     gn.handle(Event(kind="workload", request=req))
     share_before = [a.items for a in gn.dispatches[-1].assignments

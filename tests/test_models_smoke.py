@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
-from repro.models import forward, init_params, loss_fn
+from repro.models import forward, init_params
 from repro.train import optimizer as opt_lib
 from repro.train import train_step as ts
 

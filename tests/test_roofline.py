@@ -1,7 +1,6 @@
 """Roofline analysis unit tests: HLO collective parser, cost conventions."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config, get_shape
@@ -36,7 +35,7 @@ def test_collective_parser_synthetic():
 def test_cost_analysis_is_per_device():
     """Documented convention: compiled cost_analysis reports the
     per-partition module (verified here on a sharded matmul)."""
-    mesh = jax.make_mesh((1,), ("data",),
+    _ = jax.make_mesh((1,), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
     A = jax.ShapeDtypeStruct((256, 128), jnp.float32)
     B = jax.ShapeDtypeStruct((128, 64), jnp.float32)

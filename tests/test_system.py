@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config, get_smoke_config
 from repro.core.cluster import DEFAULT_NODES, SimBackend
 from repro.core.profiling import NodeProfile, ProfilingTable
-from repro.core.requests import InferenceRequest, violation_summary
+from repro.core.requests import InferenceRequest
 from repro.core.resource_manager import Event, GatewayNode
 from repro.core.variants import VariantPool
 
