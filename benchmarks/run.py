@@ -11,11 +11,11 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.cluster import DEFAULT_NODES, SimBackend
-from repro.core.dispatch import dispatch
 from repro.core.profiling import NodeProfile, ProfilingTable
 from repro.core.requests import InferenceRequest
 from repro.core.resource_manager import Event, GatewayNode
 from repro.core.variants import VariantPool
+from repro.sched import ClusterState, get_policy
 
 ARCH = "phi4-mini-3.8b"
 
@@ -51,8 +51,11 @@ def bench_fig2_strategies() -> None:
         perf_req=min(0.97 * per_node_cap,
                      lo + 0.5 * (table.perf[-1].sum() - lo)),
         acc_req=89.0)
+    state = ClusterState.from_table(table)
     for policy in ("uniform", "uniform_apx", "asymmetric", "proportional"):
-        (d, us) = _timed(lambda p=policy: dispatch(p, table, req))
+        pol = get_policy(policy)
+        (plan, us) = _timed(lambda: pol.plan(state, req))
+        d = plan.dispatch
         r = backend.execute(d)
         levels = "|".join(str(a.apx_level) for a in d.assignments)
         shares = "|".join(str(a.items) for a in d.assignments)
@@ -65,6 +68,7 @@ def bench_fig7_workload_sweep() -> None:
     """Paper Fig. 7: 4 batch sizes x 3 (perf|acc) requirements x policies."""
     table = _table()
     backend = SimBackend(table)
+    state = ClusterState.from_table(table)
     lo = table.perf[0].sum()
     cap = table.perf[-1].min() * table.num_nodes
     for items in (260, 390, 520, 650):
@@ -74,9 +78,9 @@ def bench_fig7_workload_sweep() -> None:
                                    acc_req=af)
             for policy in ("uniform", "uniform_apx", "asymmetric",
                            "proportional"):
-                (d, us) = _timed(lambda p=policy: dispatch(p, table, req),
-                                 reps=5)
-                r = backend.execute(d)
+                pol = get_policy(policy)
+                (plan, us) = _timed(lambda: pol.plan(state, req), reps=5)
+                r = backend.execute(plan.dispatch)
                 _print(f"fig7_b{items}_r{j}_{policy}", us,
                        f"perf={r.achieved_perf:.0f}/{req.perf_req:.0f};"
                        f"acc={r.achieved_acc:.2f}/{req.acc_req:.1f}")
@@ -142,7 +146,9 @@ def bench_dispatch_latency() -> None:
         lo = table.perf[0].sum()
         req = InferenceRequest(rid=0, num_items=10_000, perf_req=lo * 1.5,
                                acc_req=88.0)
-        (_, us) = _timed(lambda: dispatch("proportional", table, req), reps=10)
+        state = ClusterState.from_table(table)
+        pol = get_policy("proportional")
+        (_, us) = _timed(lambda: pol.plan(state, req), reps=10)
         _print(f"dispatch_latency_n{n_nodes}", us, f"nodes={n_nodes}")
 
 
@@ -187,6 +193,7 @@ def bench_heterogeneity_sweep() -> None:
                  for i, c in enumerate(caps)]
         table = _table(nodes)
         backend = SimBackend(table)
+        state = ClusterState.from_table(table)
         lo = table.perf[0].sum()
         cap = table.perf[-1].min() * 4
         results = {}
@@ -196,7 +203,8 @@ def bench_heterogeneity_sweep() -> None:
                 perf = rng.uniform(lo * 1.02, max(cap * 0.95, lo * 1.05))
                 req = InferenceRequest(rid=i, num_items=520, perf_req=perf,
                                        acc_req=0.0)
-                r = backend.execute(dispatch(policy, table, req))
+                r = backend.execute(
+                    get_policy(policy).plan(state, req).dispatch)
                 accs.append(r.achieved_acc)
                 met += r.meets_perf
             results[policy] = (np.mean(accs), met)

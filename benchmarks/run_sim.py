@@ -24,6 +24,12 @@ degraded-admission count, scale-up count + latency, and mean accuracy.
 ``--json`` additionally dumps every row (plus the admission outcome and
 scaling-action detail) as a JSON array — CI uploads this as the nightly
 bench artifact so the metric trajectory is diffable across commits.
+``--bench-json`` (bare, or with an explicit path) also writes a compact
+``BENCH_3.json`` (goodput, p99, shed rate per scenario x policy x
+control cell), by default at the repo root; the committed copy is the
+perf-trajectory anchor future PRs diff against, so only the nightly's
+full sweep shape (``--scenario all --horizon 15``) should refresh it —
+hence the explicit opt-in rather than piggybacking on every ``--json``.
 """
 from __future__ import annotations
 
@@ -41,14 +47,16 @@ except ModuleNotFoundError:     # run from a checkout without PYTHONPATH=src
 from repro.configs import get_config
 from repro.control import AdmissionController, Autoscaler
 from repro.core.cluster import STANDBY_NODES, SimBackend, cluster_nodes
-from repro.core.dispatch import POLICIES
 from repro.core.profiling import ProfilingTable
 from repro.core.resource_manager import GatewayNode
 from repro.core.variants import VariantPool
+from repro.sched import registered_policies
 from repro.sim import SCENARIOS, OnlineSimulator, build_scenario
 
 ARCH = "phi4-mini-3.8b"
 CONTROL_MODES = ("none", "admission", "autoscale", "full")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_COMPACT = os.path.join(REPO_ROOT, "BENCH_3.json")
 
 
 def _fresh_table(num_standby: int, seq_len: int = 512) -> ProfilingTable:
@@ -80,6 +88,14 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
                           scenario=sc.name, horizon_s=sc.horizon_s,
                           admission=admission, autoscaler=autoscaler)
     report = sim.run()
+    summary = report.summary()
+    fallbacks = summary.get("plan_fallbacks", 0.0)
+    if fallbacks:
+        # e.g. exact_oracle beyond max_enum_nodes silently planning with
+        # the paper heuristic — never let that pollute gap numbers unseen
+        print(f"    [{policy}/{control}] WARNING: {fallbacks:.0f} "
+              "plan(s) used a fallback policy (see Plan.meta)",
+              file=sys.stderr)
     if verbose:
         for line in report.log:
             if any(k in line for k in
@@ -89,7 +105,7 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
                 print(f"    [{policy}/{control}] {line}", file=sys.stderr)
     row = {"scenario": sc.name, "policy": policy, "control": control,
            "seed": seed}
-    row.update({k: float(v) for k, v in report.summary().items()})
+    row.update({k: float(v) for k, v in summary.items()})
     row["admission_counts"] = dict(report.admission_counts)
     row["scaling_actions"] = [
         {"kind": a.kind, "node": a.node, "decided_s": a.decided_s,
@@ -102,9 +118,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scenario", default="steady",
                     help=f"one of {sorted(SCENARIOS)} or 'all'")
-    ap.add_argument("--policies", default=",".join(POLICIES),
+    policy_names = registered_policies()
+    ap.add_argument("--policies", default=",".join(policy_names),
                     help="comma-separated subset of "
-                         f"{sorted(POLICIES)}")
+                         f"{sorted(policy_names)}")
     ap.add_argument("--control", default="none,full",
                     help="comma-separated subset of "
                          f"{CONTROL_MODES} to sweep")
@@ -123,6 +140,13 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default="",
                     help="also dump all rows (with admission/scaling "
                          "detail) to this JSON file")
+    ap.add_argument("--bench-json", nargs="?", const=BENCH_COMPACT,
+                    default="",
+                    help="also write the compact goodput/p99/shed "
+                         "perf-trajectory file (default path: "
+                         "BENCH_3.json at the repo root). Opt-in so a "
+                         "partial dev sweep cannot clobber the "
+                         "committed anchor")
     ap.add_argument("--verbose", action="store_true",
                     help="print fault/admission/scaling log lines to "
                          "stderr")
@@ -137,10 +161,10 @@ def main(argv=None) -> int:
     policies = [p.strip() for p in args.policies.split(",") if p.strip()]
     if not policies:
         ap.error("--policies must name at least one policy "
-                 f"from {sorted(POLICIES)}")
+                 f"from {sorted(policy_names)}")
     for p in policies:
-        if p not in POLICIES:
-            ap.error(f"unknown policy {p!r}; have {sorted(POLICIES)}")
+        if p not in policy_names:
+            ap.error(f"unknown policy {p!r}; have {sorted(policy_names)}")
     controls = [c.strip() for c in args.control.split(",") if c.strip()]
     if not controls:
         ap.error(f"--control must name at least one of {CONTROL_MODES}")
@@ -193,7 +217,37 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2, sort_keys=True)
         print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
+    if args.bench_json:
+        write_bench_compact(rows, args, path=args.bench_json)
     return 0
+
+
+def write_bench_compact(rows, args, path: str = BENCH_COMPACT):
+    """Compact perf-trajectory artifact: one goodput/p99/shed triple per
+    scenario x policy x control cell. The committed BENCH_3.json is this
+    file for the nightly sweep's shape (--scenario all --horizon 15
+    --bench-json); CI uploads the fresh copy so regressions are a
+    two-line diff."""
+    cells = {
+        f"{r['scenario']}/{r['policy']}/{r['control']}": {
+            "goodput_rps": round(r["goodput_rps"], 3),
+            "p99_latency_s": round(r["p99_latency_s"], 5),
+            "shed_rate": round(r["shed_rate"], 4),
+        }
+        for r in rows}
+    out = {
+        "bench": "run_sim",
+        "arch": ARCH,
+        "seed": args.seed,
+        "horizon_s": args.horizon,
+        "standby": args.standby,
+        "noise_std": args.noise,
+        "cells": cells,
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(cells)} compact cells to {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 from repro.configs import get_config
 from repro.core.cluster import DEFAULT_NODES, SimBackend
-from repro.core.dispatch import POLICIES
+from repro.sched import ClusterState, get_policy, registered_policies
 from repro.core.profiling import NodeProfile, ProfilingTable
 from repro.core.requests import InferenceRequest
 from repro.core.variants import VariantPool
@@ -40,11 +40,13 @@ def main():
     print(f"\nrequest: {req.num_items} items, perf>={req.perf_req:.0f}/s, "
           f"acc>={req.acc_req}%  (cluster full-acc capacity {full_cap:.0f})")
 
-    # 4. dispatch with every strategy
+    # 4. plan with every registered strategy over one frozen snapshot
     backend = SimBackend(table)
+    state = ClusterState.from_table(table)
     print(f"\n{'policy':14} {'perf':>9} {'acc':>7}  ok  levels/items")
-    for name, policy in POLICIES.items():
-        d = policy(table, req)
+    for name in registered_policies():
+        plan = get_policy(name).plan(state, req)
+        d = plan.dispatch
         r = backend.execute(d)
         ok = "YES" if (r.meets_perf and r.meets_acc) else " no"
         detail = " ".join(f"{a.node.split('-')[1]}:L{a.apx_level}x{a.items}"

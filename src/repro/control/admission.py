@@ -1,27 +1,37 @@
-"""Gateway-side admission control: token bucket + SLO-feasibility check.
+"""Gateway-side admission control: token bucket + plan-aware SLO gate.
 
 The paper's gateway admits every request; under sustained overload every
 dispatch policy then degrades the same way (queues grow without bound and
 p99 explodes). CoEdge/QPART-style feedback closes the loop at the *front
 door* instead: an arrival is admitted only if (a) the token bucket — a
 classic rate shaper refilled on the sim clock — has capacity, and (b) the
-dispatch policy can still meet the request's ``latency_budget_s`` given
-the queue backlog it would face right now.
+scheduling policy's own backlog-aware :class:`~repro.sched.plan.Plan`
+is predicted to complete within the request's ``latency_budget_s``.
+
+The gate no longer re-derives feasibility with a parallel heuristic: it
+asks the policy for a Plan over the current :class:`ClusterState`
+snapshot, decides admit/degrade/reject from that plan's predicted
+completion vs. the deadline, and the decision *carries the plan* — the
+simulator dispatches exactly it, so there is never a second planning
+pass between gate and queues.
 
 When the budget is reachable only with more approximation than the
 request's own ``perf_req`` implies, the controller can *degrade* the
 admission instead of rejecting: it rewrites the request with the higher
 effective throughput requirement (forcing the policy onto coarser apx
-levels) and relaxes ``acc_req`` to the deepest variant's accuracy — the
-renegotiated contract the client accepted by opting into degraded service.
+levels), relaxes ``acc_req`` to the deepest variant's accuracy, and
+re-plans once for the renegotiated contract. SLO-``strict`` requests
+(``InferenceRequest.slo_class``) opt out of that renegotiation and are
+shed instead.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Mapping, Optional
+from typing import Dict, Optional, Union
 
 from repro.core.profiling import ProfilingTable
-from repro.core.requests import InferenceRequest
+from repro.core.requests import SLO_DEGRADABLE, InferenceRequest
+from repro.sched import ClusterState, Plan, Policy, resolve_policy
 
 ADMIT = "admit"
 DEGRADE = "degrade"
@@ -74,63 +84,70 @@ class AdmissionDecision:
 
     ``request`` is the request to actually dispatch: the original on
     ADMIT, a rewritten (higher perf_req, relaxed acc_req) copy on
-    DEGRADE, and the original (undispatched) on REJECT.
+    DEGRADE, and the original (undispatched) on REJECT. ``plan`` is the
+    policy's Plan backing the decision — the simulator dispatches it
+    verbatim on ADMIT/DEGRADE (None on REJECT).
     """
     outcome: str                  # ADMIT | DEGRADE | REJECT
     reason: str
     request: InferenceRequest
-    est_wait_s: float = 0.0       # queue wait the feasibility check assumed
+    plan: Optional[Plan] = None
+    est_wait_s: float = 0.0       # max available-node backlog at decision
     needed_perf: float = 0.0      # items/s required to make the deadline
 
 
 class AdmissionController:
-    """SLO-feasibility + rate-shaping gate in front of the dispatch policy.
+    """Rate-shaping + plan-aware SLO gate in front of the queues.
 
-    Feasibility model: with per-node FIFO queues and a policy that shares
-    the request across every available node, the request's last share
-    starts after the *largest* backlog among the nodes it lands on — so
-    the conservative wait estimate is ``max`` over available-node backlog
-    seconds. The remaining budget then implies the cluster throughput the
-    dispatch must achieve; if even the deepest approximation row cannot
-    deliver it, the request is shed.
+    ``policy`` may be a registry name, a Policy instance, or None — the
+    OnlineSimulator wires a None up to the GatewayNode's own policy
+    object so gate and dispatch always plan identically; standalone use
+    without a simulator falls back to the paper's ``proportional``.
+
+    The fast-reject paths keep their closed-form shape (they need no
+    plan): a backlog already past the budget, or a needed throughput
+    beyond even the deepest approximation row, are shed before planning.
+    Everything else is decided from the policy's own Plan.
     """
 
     def __init__(self, table: ProfilingTable, *,
+                 policy: Union[str, Policy, None] = None,
                  rate: Optional[float] = None, burst: float = 8.0,
                  degrade: bool = True, feasibility_margin: float = 0.02):
-        self.table = table
+        # ``table`` is accepted for constructor compatibility only: since
+        # the plan-aware rewrite the gate reads capacity/accuracies/
+        # backlogs exclusively from the ClusterState snapshot, never from
+        # the live (mutable) table — that side channel is gone.
+        del table
+        self.policy: Optional[Policy] = (
+            resolve_policy(policy) if policy is not None else None)
         self.bucket = TokenBucket(rate, burst)
         self.degrade = degrade
         self.feasibility_margin = feasibility_margin
         self.counts: Dict[str, int] = {ADMIT: 0, DEGRADE: 0, REJECT: 0}
 
-    # ---- signals ------------------------------------------------------
-    def _available_capacity(self) -> float:
-        """Cluster items/s at the deepest approximation level."""
-        cols = [j for j, n in enumerate(self.table.nodes) if n.available]
-        if not cols:
-            return 0.0
-        return float(self.table.perf[-1, cols].sum())
-
-    def _est_wait_s(self, backlogs: Mapping[str, float]) -> float:
-        waits = [backlogs.get(n.name, 0.0)
-                 for n in self.table.nodes if n.available]
-        return max(waits, default=0.0)
+    def _planner(self) -> Policy:
+        if self.policy is None:
+            self.policy = resolve_policy("proportional")
+        return self.policy
 
     # ---- the gate -----------------------------------------------------
-    def decide(self, request: InferenceRequest, now: float,
-               backlogs: Mapping[str, float]) -> AdmissionDecision:
-        """Gate one arrival. ``backlogs`` maps node name -> backlog
-        seconds (running remainder + predicted queued service)."""
-        est_wait = self._est_wait_s(backlogs)
+    def decide(self, request: InferenceRequest,
+               state: ClusterState) -> AdmissionDecision:
+        """Gate one arrival against a ClusterState snapshot (taken at the
+        arrival instant, so ``state.now_s`` is the request's arrival)."""
+        now = state.now_s
+        est_wait = state.max_backlog_s()
         budget = request.latency_budget_s
         remaining = budget - est_wait
 
-        def _done(outcome: str, reason: str,
-                  req: InferenceRequest, needed: float) -> AdmissionDecision:
+        def _done(outcome: str, reason: str, req: InferenceRequest,
+                  needed: float,
+                  plan: Optional[Plan] = None) -> AdmissionDecision:
             self.counts[outcome] += 1
             return AdmissionDecision(outcome=outcome, reason=reason,
-                                     request=req, est_wait_s=est_wait,
+                                     request=req, plan=plan,
+                                     est_wait_s=est_wait,
                                      needed_perf=needed)
 
         if remaining <= 0.0:
@@ -138,24 +155,33 @@ class AdmissionController:
             return _done(REJECT, "queue_wait_exceeds_budget", request, 0.0)
 
         needed = request.num_items / remaining
-        capacity = self._available_capacity()
+        capacity = state.capacity(level=-1)
         if needed > capacity * (1.0 - self.feasibility_margin):
             return _done(REJECT, "infeasible_at_max_approximation",
                          request, needed)
 
-        if needed > request.perf_req:
-            # feasible, but only with coarser approximation than the
-            # request's own perf target implies
-            if not self.degrade:
-                return _done(REJECT, "slo_needs_degraded_service",
-                             request, needed)
+        try:
+            plan = self._planner().plan(state, request)
+        except RuntimeError:
+            return _done(REJECT, "no_available_nodes", request, needed)
+
+        if plan.meets_deadline:
             if not self.bucket.try_take(now):
                 return _done(REJECT, "rate_limited", request, needed)
-            degraded = request.degraded(
-                needed, float(self.table.accuracies[-1]))
-            return _done(DEGRADE, "degraded_to_meet_deadline",
-                         degraded, needed)
+            return _done(ADMIT, "feasible", request, needed, plan)
 
+        # the policy's own plan misses the deadline: feasible only with
+        # coarser approximation than the request's perf target implies
+        if not self.degrade or request.slo_class != SLO_DEGRADABLE:
+            return _done(REJECT, "slo_needs_degraded_service",
+                         request, needed)
+        degraded = request.degraded(
+            needed, float(state.accuracies[-1]))
+        dplan = self._planner().plan(state, degraded)
+        if not dplan.meets_deadline:
+            return _done(REJECT, "degraded_plan_misses_deadline",
+                         request, needed)
         if not self.bucket.try_take(now):
             return _done(REJECT, "rate_limited", request, needed)
-        return _done(ADMIT, "feasible", request, needed)
+        return _done(DEGRADE, "degraded_to_meet_deadline",
+                     degraded, needed, dplan)

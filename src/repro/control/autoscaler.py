@@ -22,9 +22,10 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, List, Mapping, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 from repro.core.profiling import ProfilingTable
+from repro.sched import ClusterState
 
 SPAWN = "spawn"
 RETIRE = "retire"
@@ -99,27 +100,29 @@ class Autoscaler:
             return 0.0
         return sum(not ok for ok in self._window) / len(self._window)
 
-    def _mean_active_backlog(self, backlogs: Mapping[str, float]) -> float:
-        active = [n.name for n in self.table.nodes if n.available]
-        if not active:
-            return float("inf")
-        return sum(backlogs.get(a, 0.0) for a in active) / len(active)
+    @property
+    def pending(self) -> tuple:
+        """Names of nodes currently mid-warm-up (spawn decided, not yet
+        serving) — still part of the standby set from a snapshot's view."""
+        return tuple(self._pending)
 
     # ---- control step -------------------------------------------------
     def ready(self, now: float) -> bool:
         """Cheap pre-check: False while cooling down or mid-warm-up, so
-        callers can skip building the (O(queued shares)) backlog signal
-        when evaluate() would discard it anyway."""
+        callers can skip building the (O(queued shares)) ClusterState
+        snapshot when evaluate() would discard it anyway."""
         return not self._pending and (
             now - self._last_action_s >= self.cooldown_s)
 
-    def evaluate(self, now: float,
-                 backlogs: Mapping[str, float]) -> Optional[ScalingAction]:
-        """One control-loop tick; at most one action per call, gated by
-        the cooldown (which also covers in-flight warm-ups)."""
+    def evaluate(self, state: ClusterState) -> Optional[ScalingAction]:
+        """One control-loop tick over a ClusterState snapshot (the same
+        snapshot the admission gate planned from); at most one action per
+        call, gated by the cooldown (which also covers in-flight
+        warm-ups)."""
+        now = state.now_s
         if not self.ready(now):
             return None
-        mean_backlog = self._mean_active_backlog(backlogs)
+        mean_backlog = state.mean_backlog_s()
         viol = self.violation_rate()
 
         if (mean_backlog > self.scale_up_backlog_s

@@ -1,213 +1,53 @@
-"""Dispatch Policy (paper §III-C, Algorithm 1) + the comparison baselines.
+"""Legacy dispatch surface — thin shim over ``repro.sched``.
 
-Policies (paper §II-A, §IV-B):
-  * ``uniform``       — equal split, no approximation           [10]
-  * ``uniform_apx``   — equal split, per-node approximation to reach the
-                        per-node share of perf_req               [5]
-  * ``asymmetric``    — capability-proportional split, no approx [3]
-  * ``proportional``  — THE PAPER: prune levels, per-node targets
-                        proportional to capability, subset-sum DP picks the
-                        closest table entries, minimum approximation
-  * ``exact_oracle``  — beyond-paper: exact enumeration maximising achieved
-                        accuracy subject to sum(perf) >= perf_req; used to
-                        measure Algorithm 1's optimality gap
-                        (see EXPERIMENTS.md §Perf)
+The policy implementations (paper §III-C Algorithm 1 + baselines) live in
+``repro.sched.policies`` on the unified ``ClusterState -> Policy.plan()
+-> Plan`` protocol; this module keeps the original free-function API
 
-All policies consume only the ProfilingTable — they are platform-agnostic,
-exactly as in the paper.
+    dispatch(policy_name, table, request) -> Dispatch
+    POLICIES = {name: fn(table, request) -> Dispatch}
+
+working for existing callers and the seed test suite. Each call snapshots
+the table into an immutable ClusterState (no backlogs, t=0 — the
+timeless/offline view) and unwraps the resulting Plan's Dispatch. New
+code should use ``repro.sched`` directly: the Plan carries the predicted
+finish times / makespan / feasibility the gate needs.
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import numpy as np
-
 from repro.core.profiling import ProfilingTable
-from repro.core.requests import Assignment, Dispatch, InferenceRequest
+from repro.core.requests import Dispatch, InferenceRequest
+from repro.sched import ClusterState, get_policy, registered_policies
 
 
-def _mk_dispatch(table: ProfilingTable, request: InferenceRequest,
-                 avail_idx: np.ndarray, levels: np.ndarray,
-                 policy: str, shares: Optional[np.ndarray] = None) -> Dispatch:
-    """Build a Dispatch from per-node levels; workload split proportional to
-    the selected per-node throughput (Algorithm 1 lines 15-16)."""
-    perfs = np.array([table.perf[levels[j], avail_idx[j]]
-                      for j in range(len(avail_idx))])
-    if shares is None:
-        shares = perfs / perfs.sum() if perfs.sum() > 0 else np.ones_like(perfs) / len(perfs)
-    items = np.floor(request.num_items * shares).astype(int)
-    # distribute the remainder to the fastest nodes
-    rem = request.num_items - items.sum()
-    order = np.argsort(-perfs)
-    for i in range(rem):
-        items[order[i % len(order)]] += 1
-    assignments = tuple(
-        Assignment(node=table.nodes[avail_idx[j]].name,
-                   items=int(items[j]), apx_level=int(levels[j]),
-                   perf_alloc=float(perfs[j]))
-        for j in range(len(avail_idx)))
-    return Dispatch(request=request, assignments=assignments, policy=policy)
+def _plan_offline(name: str, table: ProfilingTable,
+                  request: InferenceRequest, **kwargs) -> Dispatch:
+    state = ClusterState.from_table(table)
+    return get_policy(name, **kwargs).plan(state, request).dispatch
 
 
-def _avail(table: ProfilingTable) -> np.ndarray:
-    idx = np.array([j for j, n in enumerate(table.nodes) if n.available])
-    if len(idx) == 0:
-        raise RuntimeError("no available nodes")
-    return idx
-
-
-# ----------------------------------------------------------------------
 def uniform(table: ProfilingTable, request: InferenceRequest) -> Dispatch:
-    """MoDNN-style equal split at full accuracy."""
-    idx = _avail(table)
-    levels = np.zeros(len(idx), dtype=int)
-    shares = np.ones(len(idx)) / len(idx)
-    return _mk_dispatch(table, request, idx, levels, "uniform", shares)
+    return _plan_offline("uniform", table, request)
 
 
 def uniform_apx(table: ProfilingTable, request: InferenceRequest,
                 margin: float = 0.02) -> Dispatch:
-    """Equal split; each node approximates until its share of perf_req is
-    met (aggressive — the paper's accuracy-violating baseline)."""
-    idx = _avail(table)
-    n = len(idx)
-    per_node = (request.perf_req / n) * (
-        1.0 + margin + n / max(request.num_items, 1))
-    levels = np.empty(n, dtype=int)
-    for j, col in enumerate(idx):
-        lv = table.num_levels - 1
-        for m in range(table.num_levels):
-            if table.perf[m, col] >= per_node:
-                lv = m
-                break
-        levels[j] = lv
-    shares = np.ones(n) / n
-    return _mk_dispatch(table, request, idx, levels, "uniform_apx", shares)
+    return _plan_offline("uniform_apx", table, request, margin=margin)
 
 
 def asymmetric(table: ProfilingTable, request: InferenceRequest) -> Dispatch:
-    """Legion-style capability-proportional split, no approximation."""
-    idx = _avail(table)
-    caps = table.perf[0, idx]
-    shares = caps / caps.sum()
-    levels = np.zeros(len(idx), dtype=int)
-    return _mk_dispatch(table, request, idx, levels, "asymmetric", shares)
+    return _plan_offline("asymmetric", table, request)
 
 
-# ----------------------------------------------------------------------
 def proportional(table: ProfilingTable, request: InferenceRequest,
                  margin: float = 0.02) -> Dispatch:
-    """Algorithm 1 (faithful).
-
-    Lines 3-5: prune disconnected boards.
-    Lines 6-9: find the first (least-approximate) level index whose cluster
-               throughput meets perf_req.
-    Lines 10-11: delete deeper approximation rows.
-    Lines 12-13: per-board targets proportional to row-0 capability.
-    Line 14:   subset-sum style DP — start every board at the deepest
-               remaining row and back-propagate row-by-row toward less
-               approximation while the cluster still meets perf_req,
-               preferring moves that keep each board closest to its target.
-    Lines 15-16: split items proportional to the selected throughputs.
-    """
-    idx = _avail(table)
-    pruned = table.perf[:, idx]                        # lines 3-5
-    n = len(idx)
-    # headroom over perf_req: integer workload splits quantise the makespan
-    # by O(n/items), so small batches need proportionally more margin
-    target = request.perf_req * (1.0 + margin + n / max(request.num_items, 1))
-
-    perf_vector = pruned.sum(axis=1)                   # lines 6-7
-    cutoff = table.num_levels - 1
-    for m in range(table.num_levels):
-        if perf_vector[m] >= target:                   # line 8
-            cutoff = m
-            break
-    pruned = pruned[:cutoff + 1]                       # lines 10-11
-
-    perf_b_req = target * pruned[0] / perf_vector[0]   # lines 12-13
-
-    levels = _subset_sum_dp(pruned, perf_b_req, target)  # line 14
-    return _mk_dispatch(table, request, idx, levels, "proportional")
+    return _plan_offline("proportional", table, request, margin=margin)
 
 
-def _subset_sum_dp(pruned: np.ndarray, perf_b_req: np.ndarray,
-                   perf_req: float) -> np.ndarray:
-    """The paper's DP_alg: O(n*m) recursive search over the pruned table.
-
-    Start at the deepest remaining approximation row (which meets perf_req
-    by construction of the cutoff) and back-propagate row-by-row: lift a
-    board to a less-approximate row whenever the cluster total still meets
-    perf_req; boards whose recorded perf is already below their target are
-    lifted last (they lose the most throughput by lifting)."""
-    m, n = pruned.shape
-    levels = np.full(n, m - 1, dtype=int)
-    total = pruned[m - 1].sum()
-    if total < perf_req:
-        # infeasible even at the deepest remaining approximation:
-        # best-effort max-throughput (no lifting)
-        return levels
-
-    improved = True
-    while improved:
-        improved = False
-        # candidate lifts: (throughput loss, board) — lift cheapest first,
-        # preferring boards furthest above their per-board target
-        cands = []
-        for j in range(n):
-            if levels[j] == 0:
-                continue
-            cur = pruned[levels[j], j]
-            up = pruned[levels[j] - 1, j]
-            loss = cur - up
-            slack = cur - perf_b_req[j]
-            cands.append((loss - slack, loss, j))
-        for _, loss, j in sorted(cands, key=lambda t: t[0]):
-            if total - loss >= perf_req:
-                levels[j] -= 1
-                total -= loss
-                improved = True
-                break
-    return levels
-
-
-# ----------------------------------------------------------------------
 def exact_oracle(table: ProfilingTable, request: InferenceRequest,
                  max_enum_nodes: int = 7) -> Dispatch:
-    """Beyond-paper ORACLE: exact search over every (node -> level)
-    assignment maximising achieved accuracy
-
-        acc(L) = sum_i p_i(L) * acc(l_i) / sum_i p_i(L)
-
-    subject to sum_i p_i(L) >= perf_req (best-effort max-perf when
-    infeasible). Vectorised enumeration, O(m^n) — exact up to
-    ``max_enum_nodes`` nodes (6^7 ~ 280k combos), falling back to the
-    paper heuristic beyond. Used to measure Algorithm 1's optimality gap
-    (EXPERIMENTS.md §Perf)."""
-    idx = _avail(table)
-    pruned = table.perf[:, idx]
-    acc = table.accuracies
-    m, n = pruned.shape
-    if n > max_enum_nodes:
-        d = proportional(table, request)
-        return Dispatch(request=d.request, assignments=d.assignments,
-                        policy="exact_oracle")
-
-    grids = np.meshgrid(*([np.arange(m)] * n), indexing="ij")
-    combos = np.stack([g.reshape(-1) for g in grids], axis=1)   # (m^n, n)
-    perfs = pruned[combos, np.arange(n)[None, :]]               # (m^n, n)
-    total = perfs.sum(axis=1)
-    wacc = (perfs * acc[combos]).sum(axis=1) / total
-    feasible = total >= request.perf_req * 1.02
-    if feasible.any():
-        cand = np.where(feasible)[0]
-        # max accuracy; tie-break on max throughput
-        best = cand[np.lexsort((-total[cand], -wacc[cand]))[0]]
-    else:
-        best = int(np.argmax(total))
-    levels = combos[best]
-    return _mk_dispatch(table, request, idx, levels.astype(int),
-                        "exact_oracle")
+    return _plan_offline("exact_oracle", table, request,
+                         max_enum_nodes=max_enum_nodes)
 
 
 POLICIES = {
@@ -217,6 +57,10 @@ POLICIES = {
     "proportional": proportional,
     "exact_oracle": exact_oracle,
 }
+
+# every registered policy must stay reachable through the legacy surface
+assert set(POLICIES) == set(registered_policies()), (
+    "repro.sched registry and legacy POLICIES shim diverged")
 
 
 def dispatch(policy: str, table: ProfilingTable,

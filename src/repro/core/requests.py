@@ -11,6 +11,10 @@ import dataclasses
 from typing import Dict, List, Sequence, Tuple
 
 
+SLO_STRICT = "strict"          # accuracy contract is non-negotiable
+SLO_DEGRADABLE = "degradable"  # client opted into degraded service
+
+
 @dataclasses.dataclass(frozen=True)
 class InferenceRequest:
     rid: int
@@ -20,6 +24,11 @@ class InferenceRequest:
     seq_len: int = 128          # per-item sequence length (LM serving)
     arrival_s: float = 0.0      # sim-clock arrival time (online serving)
     deadline_s: float = 0.0     # latency budget from arrival; 0 => derive
+    slo_class: str = SLO_DEGRADABLE   # strict => gate may reject, not degrade
+
+    def __post_init__(self):
+        assert self.slo_class in (SLO_STRICT, SLO_DEGRADABLE), (
+            f"unknown slo_class {self.slo_class!r}")
 
     @property
     def latency_budget_s(self) -> float:
@@ -39,6 +48,9 @@ class InferenceRequest:
         the original value — raising perf_req must not silently shrink a
         derived budget; degraded service still aims at the original
         latency target."""
+        assert self.slo_class == SLO_DEGRADABLE, (
+            f"rid={self.rid} is SLO-strict; the gate must reject, "
+            "not degrade")
         budget = self.latency_budget_s
         return dataclasses.replace(
             self, perf_req=max(self.perf_req, perf_req),

@@ -15,15 +15,15 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core import dispatch as dispatch_lib
 from repro.core.cluster import SimBackend
 from repro.core.profiling import NodeProfile, ProfilingTable
 from repro.core.requests import (Dispatch, ExecutionResult, InferenceRequest,
                                  violation_summary)
+from repro.sched import ClusterState, Plan, Policy, resolve_policy
 
 
 class GNState(enum.Enum):
@@ -91,17 +91,19 @@ class GatewayNode:
     """
 
     def __init__(self, table: ProfilingTable, backend: SimBackend,
-                 policy: str = "proportional", *,
+                 policy: Union[str, Policy] = "proportional", *,
                  straggler_ewma: float = 0.5):
         self.table = table
         self.backend = backend
-        self.policy = policy
+        self.policy_obj: Policy = resolve_policy(policy)
+        self.policy: str = self.policy_obj.name   # registry name (reports)
         self.state = GNState.PROFILE
         self.log: List[GNState] = [self.state]
         self.locals: Dict[str, LocalNode] = {
             n.name: LocalNode(n) for n in table.nodes}
         self.results: List[ExecutionResult] = []
         self.dispatches: List[Dispatch] = []
+        self.plans: List[Plan] = []
         self.straggler_ewma = straggler_ewma
         self._profiled = False
 
@@ -155,19 +157,41 @@ class GatewayNode:
             if n.name == node:
                 n.available = avail
 
-    def plan(self, request: InferenceRequest) -> Dispatch:
-        """NETCOM -> DISTRIBUTE -> NETCOM (broadcast): run the dispatch
-        policy over the currently-available nodes WITHOUT executing.
+    def snapshot(self, *, now: float = 0.0,
+                 backlogs: Optional[Mapping[str, float]] = None,
+                 standby: Sequence[str] = ()) -> ClusterState:
+        """Freeze the cluster into an immutable ClusterState: the pruned
+        profiling view, availability, per-node backlog seconds, the
+        autoscaler's standby set, and the sim time. This is the only
+        thing a policy (or the admission gate) ever reads."""
+        return ClusterState.from_table(self.table, now=now,
+                                       backlogs=backlogs,
+                                       standby=tuple(standby))
+
+    def plan(self, request: InferenceRequest, *, now: float = 0.0,
+             backlogs: Optional[Mapping[str, float]] = None,
+             standby: Sequence[str] = ()) -> Plan:
+        """NETCOM -> DISTRIBUTE -> NETCOM (broadcast): snapshot the
+        cluster, delegate to the policy object, and commit the resulting
+        Plan WITHOUT executing.
 
         The online simulator calls this at a request's dispatch time,
-        schedules the shares onto per-node work queues itself, and reports
-        the timed outcome back through :meth:`complete`.
+        schedules the plan's shares onto per-node work queues itself, and
+        reports the timed outcome back through :meth:`complete`.
         """
+        state = self.snapshot(now=now, backlogs=backlogs, standby=standby)
+        return self.commit(self.policy_obj.plan(state, request))
+
+    def commit(self, plan: Plan) -> Plan:
+        """Record a Plan as this GN's dispatch decision (FSM DISTRIBUTE
+        transition). The admission gate plans through the policy itself;
+        committing the *same* Plan here is what guarantees gate and
+        queues act on one planning pass."""
         self._to(GNState.DISTRIBUTE)
-        d = dispatch_lib.dispatch(self.policy, self.table, request)
-        self.dispatches.append(d)
+        self.dispatches.append(plan.dispatch)
+        self.plans.append(plan)
         self._to(GNState.NETCOM)
-        return d
+        return plan
 
     def complete(self, d: Dispatch, result: ExecutionResult) -> ExecutionResult:
         """INFERENCE -> NETCOM: record an executed dispatch's outcome,
@@ -188,7 +212,7 @@ class GatewayNode:
                          now: float = 0.0) -> ExecutionResult:
         """Synchronous (timeless) path: plan + execute-all-at-once +
         complete. ``now`` stamps the dispatch on the sim clock."""
-        d = self.plan(request)
+        d = self.plan(request, now=now).dispatch
         result = self.backend.execute(d, now=max(now, request.arrival_s))
         return self.complete(d, result)
 

@@ -10,14 +10,20 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _auto_kw(n: int) -> dict:
+    """axis_types=Auto when this jax has AxisType (>= 0.5); older
+    releases (e.g. 0.4.x) predate explicit axis types and every
+    make_mesh axis is implicitly Auto already — pass nothing."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kw(len(axes)))
 
 
 def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
@@ -25,5 +31,4 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     n = jax.device_count()
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return jax.make_mesh((data, model), ("data", "model"), **_auto_kw(2))

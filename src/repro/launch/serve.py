@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.core.cluster import DEFAULT_NODES, SimBackend
-from repro.core.dispatch import POLICIES
+from repro.sched import registered_policies
 from repro.core.profiling import NodeProfile, ProfilingTable
 from repro.core.requests import InferenceRequest
 from repro.core.resource_manager import Event, GatewayNode
@@ -81,7 +81,8 @@ def smoke_inference(cfg_smoke, gn: GatewayNode, request: InferenceRequest,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="phi4-mini-3.8b")
-    ap.add_argument("--policy", choices=tuple(POLICIES), default="proportional")
+    ap.add_argument("--policy", choices=tuple(registered_policies()),
+                    default="proportional")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--smoke", action="store_true",
                     help="run real reduced-config inference per share on CPU")

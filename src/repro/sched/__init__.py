@@ -1,0 +1,29 @@
+"""Unified scheduling API: ClusterState -> Policy.plan() -> Plan.
+
+Public surface:
+  * state    — ClusterState (immutable snapshot: profiling view,
+               availability, backlogs, standby set, sim time)
+  * plan     — Plan (Dispatch + predicted finish times / makespan /
+               feasibility metadata)
+  * policy   — Policy protocol, @register_policy, get_policy,
+               resolve_policy, registered_policies
+  * policies — the five registered policies (uniform, uniform_apx,
+               asymmetric, proportional, exact_oracle)
+
+The legacy free-function surface (``repro.core.dispatch.dispatch`` and
+the ``POLICIES`` dict) is a thin shim over this package. See README.md
+in this directory for the architecture and how to register a policy.
+"""
+from repro.sched.plan import Plan
+from repro.sched.policies import (Asymmetric, ExactOracle, Proportional,
+                                  Uniform, UniformApx)
+from repro.sched.policy import (Policy, get_policy, register_policy,
+                                registered_policies, resolve_policy)
+from repro.sched.state import ClusterState
+
+__all__ = [
+    "ClusterState", "Plan", "Policy",
+    "register_policy", "registered_policies", "get_policy",
+    "resolve_policy",
+    "Uniform", "UniformApx", "Asymmetric", "Proportional", "ExactOracle",
+]

@@ -1,0 +1,279 @@
+"""The five scheduling policies on the ClusterState -> Plan protocol.
+
+Paper §III-C (Algorithm 1) + the comparison baselines (§II-A, §IV-B):
+
+  * ``uniform``       — equal split, no approximation           [10]
+  * ``uniform_apx``   — equal split, per-node approximation to reach the
+                        per-node share of perf_req               [5]
+  * ``asymmetric``    — capability-proportional split, no approx [3]
+  * ``proportional``  — THE PAPER: prune levels, per-node targets
+                        proportional to capability, subset-sum DP picks the
+                        closest table entries, minimum approximation
+  * ``exact_oracle``  — beyond-paper: exact enumeration maximising achieved
+                        accuracy subject to sum(perf) >= perf_req; used to
+                        measure Algorithm 1's optimality gap. Beyond
+                        ``max_enum_nodes`` it falls back to the paper
+                        heuristic and says so in ``Plan.meta['fallback']``.
+
+All policies consume only the immutable ClusterState snapshot — they are
+platform-agnostic, exactly as in the paper, and can never mutate the live
+ProfilingTable through a side channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+from typing import Mapping, Optional
+
+import numpy as np
+
+from repro.core.requests import Assignment, Dispatch, InferenceRequest
+from repro.sched.plan import Plan
+from repro.sched.policy import register_policy
+from repro.sched.state import ClusterState
+
+
+def _avail(state: ClusterState) -> np.ndarray:
+    idx = state.avail_idx
+    if len(idx) == 0:
+        raise RuntimeError("no available nodes")
+    return idx
+
+
+def _mk_plan(state: ClusterState, request: InferenceRequest,
+             avail_idx: np.ndarray, levels: np.ndarray, policy: str,
+             shares: Optional[np.ndarray] = None,
+             meta: Optional[Mapping[str, object]] = None) -> Plan:
+    """Build a Plan from per-node levels: workload split proportional to
+    the selected per-node throughput (Algorithm 1 lines 15-16), plus the
+    predicted per-node finish times / makespan the gate decides on."""
+    perfs = np.array([state.perf[levels[j], avail_idx[j]]
+                      for j in range(len(avail_idx))])
+    if shares is None:
+        shares = (perfs / perfs.sum() if perfs.sum() > 0
+                  else np.ones_like(perfs) / len(perfs))
+    items = np.floor(request.num_items * shares).astype(int)
+    # distribute the remainder to the fastest nodes
+    rem = request.num_items - items.sum()
+    order = np.argsort(-perfs)
+    for i in range(rem):
+        items[order[i % len(order)]] += 1
+    assignments = tuple(
+        Assignment(node=state.names[avail_idx[j]],
+                   items=int(items[j]), apx_level=int(levels[j]),
+                   perf_alloc=float(perfs[j]))
+        for j in range(len(avail_idx)))
+    dispatch = Dispatch(request=request, assignments=assignments,
+                        policy=policy)
+
+    now = state.now_s
+    service: dict = {}
+    finish: dict = {}
+    for a in assignments:
+        if a.items == 0:
+            continue                    # empty shares are never enqueued
+        t = a.items / max(a.perf_alloc, 1e-9)
+        service[a.node] = t
+        finish[a.node] = now + state.backlog_of(a.node) + t
+    exec_makespan = max(service.values(), default=0.0)
+    finish_s = max(finish.values(), default=now)
+    total_acc = sum(a.items * float(state.accuracies[a.apx_level])
+                    for a in assignments)
+    return Plan(
+        dispatch=dispatch, policy=policy, created_s=now,
+        node_service_s=types.MappingProxyType(service),
+        node_finish_s=types.MappingProxyType(finish),
+        exec_makespan_s=exec_makespan,
+        makespan_s=finish_s - now, finish_s=finish_s,
+        alloc_perf=float(perfs.sum()),
+        predicted_acc=total_acc / max(request.num_items, 1),
+        feasible=bool(perfs.sum() >= request.perf_req * (1 - 1e-9)),
+        meta=types.MappingProxyType(dict(meta or {})))
+
+
+# ----------------------------------------------------------------------
+@register_policy("uniform")
+@dataclasses.dataclass(frozen=True)
+class Uniform:
+    """MoDNN-style equal split at full accuracy."""
+    name: str = "uniform"
+
+    def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
+        idx = _avail(state)
+        levels = np.zeros(len(idx), dtype=int)
+        shares = np.ones(len(idx)) / len(idx)
+        return _mk_plan(state, request, idx, levels, self.name, shares)
+
+
+@register_policy("uniform_apx")
+@dataclasses.dataclass(frozen=True)
+class UniformApx:
+    """Equal split; each node approximates until its share of perf_req is
+    met (aggressive — the paper's accuracy-violating baseline)."""
+    name: str = "uniform_apx"
+    margin: float = 0.02
+
+    def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
+        idx = _avail(state)
+        n = len(idx)
+        per_node = (request.perf_req / n) * (
+            1.0 + self.margin + n / max(request.num_items, 1))
+        levels = np.empty(n, dtype=int)
+        for j, col in enumerate(idx):
+            lv = state.num_levels - 1
+            for m in range(state.num_levels):
+                if state.perf[m, col] >= per_node:
+                    lv = m
+                    break
+            levels[j] = lv
+        shares = np.ones(n) / n
+        return _mk_plan(state, request, idx, levels, self.name, shares)
+
+
+@register_policy("asymmetric")
+@dataclasses.dataclass(frozen=True)
+class Asymmetric:
+    """Legion-style capability-proportional split, no approximation."""
+    name: str = "asymmetric"
+
+    def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
+        idx = _avail(state)
+        caps = state.perf[0, idx]
+        shares = caps / caps.sum()
+        levels = np.zeros(len(idx), dtype=int)
+        return _mk_plan(state, request, idx, levels, self.name, shares)
+
+
+# ----------------------------------------------------------------------
+@register_policy("proportional")
+@dataclasses.dataclass(frozen=True)
+class Proportional:
+    """Algorithm 1 (faithful).
+
+    Lines 3-5: prune disconnected boards.
+    Lines 6-9: find the first (least-approximate) level index whose cluster
+               throughput meets perf_req.
+    Lines 10-11: delete deeper approximation rows.
+    Lines 12-13: per-board targets proportional to row-0 capability.
+    Line 14:   subset-sum style DP — start every board at the deepest
+               remaining row and back-propagate row-by-row toward less
+               approximation while the cluster still meets perf_req,
+               preferring moves that keep each board closest to its target.
+    Lines 15-16: split items proportional to the selected throughputs.
+    """
+    name: str = "proportional"
+    margin: float = 0.02
+
+    def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
+        idx = _avail(state)
+        pruned = state.perf[:, idx]                    # lines 3-5
+        n = len(idx)
+        # headroom over perf_req: integer workload splits quantise the
+        # makespan by O(n/items), so small batches need more margin
+        target = request.perf_req * (
+            1.0 + self.margin + n / max(request.num_items, 1))
+
+        perf_vector = pruned.sum(axis=1)               # lines 6-7
+        cutoff = state.num_levels - 1
+        for m in range(state.num_levels):
+            if perf_vector[m] >= target:               # line 8
+                cutoff = m
+                break
+        pruned = pruned[:cutoff + 1]                   # lines 10-11
+
+        perf_b_req = target * pruned[0] / perf_vector[0]   # lines 12-13
+
+        levels = _subset_sum_dp(pruned, perf_b_req, target)  # line 14
+        return _mk_plan(state, request, idx, levels, self.name)
+
+
+def _subset_sum_dp(pruned: np.ndarray, perf_b_req: np.ndarray,
+                   perf_req: float) -> np.ndarray:
+    """The paper's DP_alg: O(n*m) recursive search over the pruned table.
+
+    Start at the deepest remaining approximation row (which meets perf_req
+    by construction of the cutoff) and back-propagate row-by-row: lift a
+    board to a less-approximate row whenever the cluster total still meets
+    perf_req; boards whose recorded perf is already below their target are
+    lifted last (they lose the most throughput by lifting)."""
+    m, n = pruned.shape
+    levels = np.full(n, m - 1, dtype=int)
+    total = pruned[m - 1].sum()
+    if total < perf_req:
+        # infeasible even at the deepest remaining approximation:
+        # best-effort max-throughput (no lifting)
+        return levels
+
+    improved = True
+    while improved:
+        improved = False
+        # candidate lifts: (throughput loss, board) — lift cheapest first,
+        # preferring boards furthest above their per-board target
+        cands = []
+        for j in range(n):
+            if levels[j] == 0:
+                continue
+            cur = pruned[levels[j], j]
+            up = pruned[levels[j] - 1, j]
+            loss = cur - up
+            slack = cur - perf_b_req[j]
+            cands.append((loss - slack, loss, j))
+        for _, loss, j in sorted(cands, key=lambda t: t[0]):
+            if total - loss >= perf_req:
+                levels[j] -= 1
+                total -= loss
+                improved = True
+                break
+    return levels
+
+
+# ----------------------------------------------------------------------
+@register_policy("exact_oracle")
+@dataclasses.dataclass(frozen=True)
+class ExactOracle:
+    """Beyond-paper ORACLE: exact search over every (node -> level)
+    assignment maximising achieved accuracy
+
+        acc(L) = sum_i p_i(L) * acc(l_i) / sum_i p_i(L)
+
+    subject to sum_i p_i(L) >= perf_req (best-effort max-perf when
+    infeasible). Vectorised enumeration, O(m^n) — exact up to
+    ``max_enum_nodes`` nodes (6^7 ~ 280k combos). Beyond that it falls
+    back to the paper heuristic and records
+    ``Plan.meta['fallback'] = 'proportional'`` so optimality-gap numbers
+    can't silently include heuristic rows (EXPERIMENTS.md §Perf)."""
+    name: str = "exact_oracle"
+    max_enum_nodes: int = 7
+
+    def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
+        idx = _avail(state)
+        pruned = state.perf[:, idx]
+        acc = state.accuracies
+        m, n = pruned.shape
+        if n > self.max_enum_nodes:
+            fb = Proportional().plan(state, request)
+            return dataclasses.replace(
+                fb,
+                dispatch=Dispatch(request=fb.dispatch.request,
+                                  assignments=fb.dispatch.assignments,
+                                  policy=self.name),
+                policy=self.name,
+                meta=types.MappingProxyType(
+                    {"fallback": "proportional",
+                     "reason": f"n={n} > max_enum_nodes="
+                               f"{self.max_enum_nodes}"}))
+
+        grids = np.meshgrid(*([np.arange(m)] * n), indexing="ij")
+        combos = np.stack([g.reshape(-1) for g in grids], axis=1)  # (m^n, n)
+        perfs = pruned[combos, np.arange(n)[None, :]]              # (m^n, n)
+        total = perfs.sum(axis=1)
+        wacc = (perfs * acc[combos]).sum(axis=1) / total
+        feasible = total >= request.perf_req * 1.02
+        if feasible.any():
+            cand = np.where(feasible)[0]
+            # max accuracy; tie-break on max throughput
+            best = cand[np.lexsort((-total[cand], -wacc[cand]))[0]]
+        else:
+            best = int(np.argmax(total))
+        levels = combos[best]
+        return _mk_plan(state, request, idx, levels.astype(int), self.name)

@@ -1,0 +1,117 @@
+"""Immutable cluster-state snapshot consumed by every scheduling policy.
+
+A ``ClusterState`` is everything a :class:`~repro.sched.policy.Policy`
+is allowed to know at planning time, frozen at one sim-clock instant:
+
+  * the profiling view (per-node throughput at each approximation level,
+    accuracy ladder) — a *copy* of the live ProfilingTable, so a policy
+    can never mutate the table through a side channel;
+  * node membership: names, availability mask, and the standby set the
+    autoscaler holds in reserve;
+  * per-node queue backlog in predicted seconds of work — the signal the
+    admission gate and the autoscaler feed on;
+  * the snapshot time on the sim clock.
+
+CoEdge/QPART frame partitioning as an optimization over exactly this kind
+of explicit state object; adopting that shape is what lets the admission
+gate reuse the policy's own plan instead of re-deriving feasibility with
+a parallel heuristic (see repro/sched/README.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import types
+from typing import FrozenSet, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.profiling import ProfilingTable
+
+
+def _frozen_array(a: np.ndarray) -> np.ndarray:
+    out = np.array(a, dtype=np.float64, copy=True)
+    out.flags.writeable = False
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterState:
+    """One immutable snapshot of the serving cluster.
+
+    ``perf[m, j]`` is node j's throughput (items/s) at approximation
+    level m (0 = most accurate); ``backlog_s[name]`` is the predicted
+    seconds of queued + running work ahead of a share enqueued now
+    (absent names mean an empty queue). All arrays are read-only copies.
+    """
+    now_s: float
+    names: Tuple[str, ...]
+    available: Tuple[bool, ...]
+    perf: np.ndarray                     # (levels, nodes), read-only
+    accuracies: np.ndarray               # (levels,), read-only
+    backlog_s: Mapping[str, float]
+    standby: FrozenSet[str] = frozenset()
+
+    def __post_init__(self):
+        assert self.perf.shape == (len(self.accuracies), len(self.names))
+        assert len(self.available) == len(self.names)
+
+    @classmethod
+    def from_table(cls, table: ProfilingTable, *, now: float = 0.0,
+                   backlogs: Optional[Mapping[str, float]] = None,
+                   standby: Tuple[str, ...] = ()) -> "ClusterState":
+        """Snapshot a live ProfilingTable (+ queue backlogs) at ``now``."""
+        return cls(
+            now_s=now,
+            names=tuple(n.name for n in table.nodes),
+            available=tuple(bool(n.available) for n in table.nodes),
+            perf=_frozen_array(table.perf),
+            accuracies=_frozen_array(table.accuracies),
+            backlog_s=types.MappingProxyType(dict(backlogs or {})),
+            standby=frozenset(standby))
+
+    # ---- views --------------------------------------------------------
+    @property
+    def num_levels(self) -> int:
+        return self.perf.shape[0]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.perf.shape[1]
+
+    @property
+    def avail_idx(self) -> np.ndarray:
+        """Column indices of the available (serving) nodes."""
+        return np.array([j for j, a in enumerate(self.available) if a],
+                        dtype=int)
+
+    @property
+    def available_perf(self) -> np.ndarray:
+        """Pruned profiling view: perf columns of available nodes only
+        (the paper's lines 3-5 prune of disconnected boards)."""
+        return self.perf[:, self.avail_idx]
+
+    def capacity(self, level: int = -1) -> float:
+        """Cluster items/s over available nodes at ``level`` (default:
+        the deepest approximation — the feasibility ceiling)."""
+        idx = self.avail_idx
+        if len(idx) == 0:
+            return 0.0
+        return float(self.perf[level, idx].sum())
+
+    def backlog_of(self, name: str) -> float:
+        return float(self.backlog_s.get(name, 0.0))
+
+    def max_backlog_s(self) -> float:
+        """Largest backlog among available nodes — the conservative wait
+        bound for a request whose shares land on every serving node."""
+        waits = [self.backlog_of(n)
+                 for n, a in zip(self.names, self.available) if a]
+        return max(waits, default=0.0)
+
+    def mean_backlog_s(self) -> float:
+        """Mean backlog across available nodes (autoscaler signal);
+        +inf when no node serves, so scale-up pressure is maximal."""
+        active = [n for n, a in zip(self.names, self.available) if a]
+        if not active:
+            return float("inf")
+        return sum(self.backlog_of(n) for n in active) / len(active)

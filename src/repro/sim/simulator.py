@@ -12,12 +12,17 @@ now happening *during* execution instead of between manual calls).
 Per-request accounting: arrival -> dispatch -> per-share queue wait ->
 last-share completion; deadline = the request's ``latency_budget_s``.
 
-Closed-loop control (optional): an ``AdmissionController`` gates every
-arrival against the token bucket and an SLO-feasibility estimate built
-from live queue backlogs (reject / degrade / admit), and an ``Autoscaler``
-spawns/retires standby worker groups on queue-depth and deadline-violation
-signals — spawns become serveable after a warm-up (``node_up`` event) and
-trigger a re-PROFILE of the joining node's table column.
+Closed-loop control (optional): each event builds one immutable
+``ClusterState`` snapshot (availability, profiling view, per-node queue
+backlogs, standby set) shared by both controllers. The
+``AdmissionController`` gates every arrival against the token bucket and
+the dispatch policy's own backlog-aware ``Plan`` (reject / degrade /
+admit — the admitted plan is dispatched verbatim, no second planning
+pass), and the ``Autoscaler`` spawns/retires standby worker groups on
+queue-depth and deadline-violation signals — spawns become serveable
+after a warm-up (``node_up`` event) and trigger a re-PROFILE of the
+joining node's table column. Requests parked during a total outage
+re-enter through the admission gate when capacity returns.
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ from repro.control.autoscaler import RETIRE, SPAWN, Autoscaler, ScalingAction
 from repro.core.requests import (Assignment, Dispatch, ExecutionResult,
                                  InferenceRequest, violation_summary)
 from repro.core.resource_manager import Event, GatewayNode
+from repro.sched import ClusterState, Plan
 from repro.sim.events import EventQueue, SimClock, SimEvent
 
 
@@ -118,6 +124,7 @@ class RequestRecord:
     epoch: int = 0
     pending_shares: int = 0
     dispatch: Optional[Dispatch] = None
+    plan: Optional[Plan] = None       # the Plan behind the final dispatch
     per_node_time: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
@@ -175,6 +182,11 @@ class SimReport:
         s["goodput_rps"] = sum(
             r.meets_deadline for r in admitted) / span
         s["redistributes"] = float(sum(r.redistributed for r in self.records))
+        # oracle (or any policy) falling back to a heuristic plan: count
+        # it so optimality-gap numbers can't be polluted unnoticed
+        s["plan_fallbacks"] = float(sum(
+            1 for r in self.records
+            if r.plan is not None and "fallback" in r.plan.meta))
         spawns = [a for a in self.scaling if a.kind == SPAWN]
         lat = [a.ready_s - a.decided_s for a in spawns]
         s["scale_ups"] = float(len(spawns))
@@ -202,6 +214,11 @@ class OnlineSimulator:
         self.backend = gn.backend
         self.admission = admission
         self.autoscaler = autoscaler
+        if admission is not None and admission.policy is None:
+            # gate and dispatch must plan identically: the admission
+            # controller adopts the GN's own policy object unless the
+            # caller wired a different one in explicitly
+            admission.policy = gn.policy_obj
         self.clock = SimClock()
         self.events = EventQueue()
         self.nodes: Dict[str, _NodeQueue] = {
@@ -260,11 +277,12 @@ class OnlineSimulator:
             req: InferenceRequest = ev.payload["request"]
             rec = RequestRecord(request=req, arrival_s=req.arrival_s)
             self.records[req.rid] = rec
-            # one backlog scan per event, shared by both controllers
-            backlogs = (self._backlogs(now) if self.admission is not None
-                        or self._autoscaler_ready(now) else None)
-            self._admit(rec, now, backlogs)
-            self._autoscale_tick(now, backlogs)
+            # one ClusterState snapshot per event, shared by both
+            # controllers (and by the plan the gate hands to the queues)
+            state = (self._snapshot(now) if self.admission is not None
+                     or self._autoscaler_ready(now) else None)
+            self._admit(rec, now, state)
+            self._autoscale_tick(now, state)
         elif ev.kind == "share_done":
             self._share_done(ev.payload["node"], ev.payload["share_id"])
             self._autoscale_tick(now, None)
@@ -286,22 +304,39 @@ class OnlineSimulator:
 
     # ---- closed-loop control ----------------------------------------
     def _backlogs(self, now: float) -> Dict[str, float]:
-        """Per-node backlog seconds, the shared control-loop signal."""
+        """Per-node backlog seconds from the queue sensors."""
         return {name: nq.backlog_s(now, self.backend.predicted_time)
                 for name, nq in self.nodes.items()}
 
+    def _snapshot(self, now: float) -> ClusterState:
+        """One immutable ClusterState per event: per-node backlog
+        seconds from the queue sensors, availability from the table, and
+        the autoscaler's current standby pool — the single signal the
+        admission gate, the policy, and the autoscaler all read."""
+        backlogs = self._backlogs(now)
+        standby: Tuple[str, ...] = ()
+        if self.autoscaler is not None:
+            standby = tuple(self.autoscaler.standby) + self.autoscaler.pending
+        return self.gn.snapshot(now=now, backlogs=backlogs,
+                                standby=standby)
+
     def _admit(self, rec: RequestRecord, now: float,
-               backlogs: Optional[Dict[str, float]]):
+               state: Optional[ClusterState]):
         """Admission gate in front of DISTRIBUTE; absent a controller
-        every request is admitted unchanged (PR 1 behaviour)."""
+        every request is admitted unchanged (PR 1 behaviour). On
+        ADMIT/DEGRADE the decision's own Plan is dispatched — there is
+        no second planning pass between gate and queues."""
         if self.admission is None:
             self._dispatch(rec, now)
             return
-        decision = self.admission.decide(rec.request, now,
-                                         backlogs or {})
+        if state is None:
+            state = self._snapshot(now)
+        decision = self.admission.decide(rec.request, state)
         if decision.outcome == REJECT:
             rec.rejected = True
             rec.reject_reason = decision.reason
+            rec.degraded_admission = False
+            rec.effective_request = None
             if self.autoscaler is not None:
                 # a shed is a failed SLO: it must push the autoscaler
                 # toward capacity even though no queue ever saw it
@@ -310,6 +345,7 @@ class OnlineSimulator:
                       f"({decision.reason}, est_wait="
                       f"{decision.est_wait_s:.3f}s)")
             return
+        rec.rejected = False
         if decision.outcome == DEGRADE:
             rec.degraded_admission = True
             rec.effective_request = decision.request
@@ -318,21 +354,21 @@ class OnlineSimulator:
                       f"{decision.request.perf_req:.1f} items/s)")
         else:
             assert decision.outcome == ADMIT
-        self._dispatch(rec, now)
+        self._dispatch(rec, now, plan=decision.plan)
 
     def _autoscaler_ready(self, now: float) -> bool:
         return self.autoscaler is not None and self.autoscaler.ready(now)
 
     def _autoscale_tick(self, now: float,
-                        backlogs: Optional[Dict[str, float]]):
-        """Evaluate the autoscaler, reusing the event's backlog scan when
-        one was already built; skip the scan entirely while the cooldown
-        / warm-up guard would discard it unread."""
+                        state: Optional[ClusterState]):
+        """Evaluate the autoscaler, reusing the event's ClusterState when
+        one was already built; skip the snapshot entirely while the
+        cooldown / warm-up guard would discard it unread."""
         if not self._autoscaler_ready(now):
             return
-        if backlogs is None:
-            backlogs = self._backlogs(now)
-        action = self.autoscaler.evaluate(now, backlogs)
+        if state is None:
+            state = self._snapshot(now)
+        action = self.autoscaler.evaluate(state)
         if action is None:
             return
         if action.kind == SPAWN:
@@ -354,25 +390,44 @@ class OnlineSimulator:
         nq.up = True
         self._log(f"node_up node={node} (warmed up, re-profiled)")
         self._maybe_start(nq)
+        self._readmit_parked(now, "scale-up")
+
+    def _readmit_parked(self, now: float, why: str):
+        """Parked requests re-enter through the admission gate (token
+        bucket included) when capacity returns — a scale-up or reconnect
+        must not smuggle them past the shed/degrade accounting."""
         parked, self._parked = self._parked, []
         for req in parked:
-            self._log(f"rid={req.rid} re-admitted after scale-up")
-            self._dispatch(self.records[req.rid], now)
+            self._log(f"rid={req.rid} re-admitted after {why} "
+                      "(through the gate)")
+            self._admit(self.records[req.rid], now, None)
 
     # ---- dispatch & execution ---------------------------------------
-    def _dispatch(self, rec: RequestRecord, now: float):
+    def _dispatch(self, rec: RequestRecord, now: float,
+                  plan: Optional[Plan] = None):
         """GN re-enters DISTRIBUTE for this request; shares hit the queues.
-        A degraded admission dispatches its renegotiated copy (higher
+        ``plan`` is the admission gate's own Plan when one exists — the GN
+        commits it verbatim (plan-once); otherwise the GN plans here. A
+        degraded admission dispatches its renegotiated copy (higher
         perf_req -> coarser apx levels), never the original."""
         try:
-            d = self.gn.plan(rec.effective_request or rec.request)
+            if plan is None:
+                # no-gate and re-DISTRIBUTE paths plan here; feed the
+                # live backlogs so the Plan's finish/makespan predictions
+                # stay exact even when the queues are busy
+                plan = self.gn.plan(rec.effective_request or rec.request,
+                                    now=now, backlogs=self._backlogs(now))
+            else:
+                self.gn.commit(plan)
         except RuntimeError:
             # every node down: park until a reconnect re-admits it
             self._parked.append(rec.request)
             self._log(f"rid={rec.request.rid} parked (no available nodes)")
             return
+        d = plan.dispatch
         rec.epoch += 1
         rec.dispatch = d
+        rec.plan = plan
         rec.dispatch_s = now
         if rec.first_dispatch_s < 0:
             rec.first_dispatch_s = now
@@ -493,7 +548,4 @@ class OnlineSimulator:
         self.nodes[node].up = True
         self._log(f"reconnect node={node}")
         self._maybe_start(self.nodes[node])
-        parked, self._parked = self._parked, []
-        for req in parked:
-            self._log(f"rid={req.rid} re-admitted after reconnect")
-            self._dispatch(self.records[req.rid], now)
+        self._readmit_parked(now, "reconnect")

@@ -12,6 +12,7 @@ from repro.core.profiling import NodeProfile, ProfilingTable
 from repro.core.requests import InferenceRequest
 from repro.core.resource_manager import Event, GatewayNode
 from repro.core.variants import VariantPool
+from repro.sched import ClusterState
 from repro.sim import OnlineSimulator, build_scenario
 from repro.sim.arrivals import BurstArrivals, RequestSampler
 from repro.sim.scenarios import trace as trace_scenario
@@ -34,6 +35,11 @@ def _measured_table(pool, caps, standby=()):
     return ProfilingTable(pool, nodes, measured=caps[None, :] * speed)
 
 
+def _state(table, now=0.0, backlogs=None):
+    """ClusterState snapshot shorthand for direct gate/autoscaler calls."""
+    return ClusterState.from_table(table, now=now, backlogs=backlogs)
+
+
 # ---- token bucket -----------------------------------------------------
 def test_token_bucket_refills_on_sim_clock():
     b = TokenBucket(rate=1.0, burst=1.0)
@@ -53,10 +59,10 @@ def test_admission_rate_limit_uses_sim_clock(pool):
     adm = AdmissionController(table, rate=1.0, burst=1.0)
     req = InferenceRequest(rid=0, num_items=10, perf_req=50.0, acc_req=0.0,
                            deadline_s=10.0)
-    assert adm.decide(req, 0.0, {}).outcome == ADMIT
-    d = adm.decide(req, 0.1, {})
+    assert adm.decide(req, _state(table)).outcome == ADMIT
+    d = adm.decide(req, _state(table, now=0.1))
     assert d.outcome == REJECT and d.reason == "rate_limited"
-    assert adm.decide(req, 1.5, {}).outcome == ADMIT   # clock refilled
+    assert adm.decide(req, _state(table, now=1.5)).outcome == ADMIT   # clock refilled
 
 
 # ---- SLO feasibility --------------------------------------------------
@@ -69,13 +75,13 @@ def test_admission_rejects_infeasible_deterministically(pool):
     req = InferenceRequest(rid=0, num_items=100, perf_req=100.0,
                            acc_req=0.0, deadline_s=0.2)
     for _ in range(3):
-        d = adm.decide(req, 0.0, {"n0": 0.0})
+        d = adm.decide(req, _state(table, backlogs={"n0": 0.0}))
         assert d.outcome == REJECT
         assert d.reason == "infeasible_at_max_approximation"
     # backlog alone can also kill it: budget 1s, queue wait 1.5s
     slow = InferenceRequest(rid=1, num_items=10, perf_req=100.0,
                             acc_req=0.0, deadline_s=1.0)
-    d = adm.decide(slow, 0.0, {"n0": 1.5})
+    d = adm.decide(slow, _state(table, backlogs={"n0": 1.5}))
     assert d.outcome == REJECT
     assert d.reason == "queue_wait_exceeds_budget"
     assert adm.counts[REJECT] == 4
@@ -91,7 +97,7 @@ def test_admission_degrades_instead_of_rejecting(pool):
     # with backlog 0.2s the remaining budget forces ~125 items/s
     req = InferenceRequest(rid=0, num_items=100, perf_req=100.0,
                            acc_req=95.0, deadline_s=1.0)
-    d = adm.decide(req, 0.0, {"n0": 0.2})
+    d = adm.decide(req, _state(table, backlogs={"n0": 0.2}))
     assert d.outcome == DEGRADE
     assert d.request.perf_req == pytest.approx(100 / 0.8)
     assert d.request.acc_req == pytest.approx(
@@ -99,7 +105,7 @@ def test_admission_degrades_instead_of_rejecting(pool):
     assert d.request.latency_budget_s == pytest.approx(1.0)
     # with no-degrade policy the same request is shed instead
     strict = AdmissionController(table, degrade=False)
-    assert strict.decide(req, 0.0, {"n0": 0.2}).outcome == REJECT
+    assert strict.decide(req, _state(table, backlogs={"n0": 0.2})).outcome == REJECT
 
 
 def test_simulator_marks_rejected_and_degraded_records(pool):
@@ -138,11 +144,11 @@ def test_autoscaler_cooldown_and_reprofile_on_scale_up(pool):
     table.scale_node(1, 0.5)
     decayed = table.perf[:, 1].copy()
 
-    a = asc.evaluate(0.0, {"n0": 1.0, "n1": 0.0})
+    a = asc.evaluate(_state(table, backlogs={"n0": 1.0, "n1": 0.0}))
     assert a is not None and a.kind == "spawn" and a.node == "n1"
     assert a.ready_s == pytest.approx(2.0)
     # no second action while the spawn is pending / cooling down
-    assert asc.evaluate(0.1, {"n0": 9.9}) is None
+    assert asc.evaluate(_state(table, now=0.1, backlogs={"n0": 9.9})) is None
     # node_up: the GN's spawn handler owns PROFILE-on-join, the
     # autoscaler just does bookkeeping (simulator fires both together)
     gn.handle(Event(kind="spawn", node="n1", time=2.0))
@@ -152,9 +158,9 @@ def test_autoscaler_cooldown_and_reprofile_on_scale_up(pool):
     assert table.perf[0, 1] == pytest.approx(80.0)
     assert table.nodes[1].available
     # still inside the 5s cooldown
-    assert asc.evaluate(3.0, {"n0": 9.9, "n1": 9.9}) is None
+    assert asc.evaluate(_state(table, now=3.0, backlogs={"n0": 9.9, "n1": 9.9})) is None
     # after cooldown + calm signals: the spawned node retires (LIFO)
-    r = asc.evaluate(6.0, {"n0": 0.0, "n1": 0.0})
+    r = asc.evaluate(_state(table, now=6.0, backlogs={"n0": 0.0, "n1": 0.0}))
     assert r is not None and r.kind == "retire" and r.node == "n1"
     assert "n1" in asc.standby            # back in the pool
     s = asc.summary()

@@ -34,9 +34,10 @@ def test_collective_parser_synthetic():
 
 def test_cost_analysis_is_per_device():
     """Documented convention: compiled cost_analysis reports the
-    per-partition module (verified here on a sharded matmul)."""
-    _ = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    per-partition module (verified here on a sharded matmul). Mesh built
+    through the launcher helper so the AxisType version gate is covered."""
+    from repro.launch.mesh import make_local_mesh
+    _ = make_local_mesh()
     A = jax.ShapeDtypeStruct((256, 128), jnp.float32)
     B = jax.ShapeDtypeStruct((128, 64), jnp.float32)
     comp = jax.jit(lambda a, b: a @ b).lower(A, B).compile()

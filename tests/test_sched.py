@@ -1,0 +1,297 @@
+"""Unified scheduling API tests: ClusterState -> Policy.plan() -> Plan.
+
+Covers the registry round-trip (every registered policy resolvable and
+shim-compatible), Plan prediction invariants, the plan-once admission
+property (the gate's predicted makespan equals the simulator's realized
+makespan under a noise-free SimBackend, and the *same* plan object is
+dispatched — no second planning pass), SLO classes, and the
+exact_oracle fallback surfacing.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.control import AdmissionController
+from repro.control.admission import ADMIT, DEGRADE, REJECT
+from repro.core.cluster import SimBackend
+from repro.core.dispatch import POLICIES, dispatch
+from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.requests import SLO_STRICT, InferenceRequest
+from repro.core.resource_manager import GatewayNode
+from repro.core.variants import VariantPool
+from repro.sched import (ClusterState, get_policy, registered_policies,
+                         resolve_policy)
+from repro.sim import OnlineSimulator, build_scenario
+from repro.sim.scenarios import trace as trace_scenario
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return VariantPool(get_config("phi4-mini-3.8b"))
+
+
+def _measured_table(pool, caps, standby=()):
+    caps = np.asarray(caps, dtype=np.float64)
+    speed = np.linspace(1.0, 2.1, len(pool))[:, None]
+    nodes = [NodeProfile(f"n{i}", chips=1,
+                         available=f"n{i}" not in standby)
+             for i in range(len(caps))]
+    return ProfilingTable(pool, nodes, measured=caps[None, :] * speed)
+
+
+def _req(table, frac=0.5, items=520, **kw):
+    lo, hi = table.perf[0].sum(), table.perf[-1].sum()
+    return InferenceRequest(rid=kw.pop("rid", 0), num_items=items,
+                            perf_req=lo + frac * (hi - lo),
+                            acc_req=kw.pop("acc_req", 87.0), **kw)
+
+
+# ---- registry round-trip ---------------------------------------------
+def test_registry_names_match_legacy_shim():
+    assert set(registered_policies()) == set(POLICIES)
+    assert registered_policies() == ["uniform", "uniform_apx",
+                                     "asymmetric", "proportional",
+                                     "exact_oracle"]
+
+
+def test_every_registered_policy_shim_compatible(pool):
+    """get_policy(name).plan() and the legacy dispatch() shim produce the
+    identical Dispatch for the identical (table, request)."""
+    table = _measured_table(pool, [100.0, 70.0, 40.0])
+    req = _req(table, 0.5)
+    state = ClusterState.from_table(table)
+    for name in registered_policies():
+        plan = get_policy(name).plan(state, req)
+        legacy = dispatch(name, table, req)
+        assert plan.policy == name
+        assert plan.dispatch == legacy, name
+        assert plan.dispatch.total_items == req.num_items, name
+
+
+def test_resolve_policy_accepts_instances_and_rejects_junk():
+    pol = get_policy("proportional")
+    assert resolve_policy(pol) is pol
+    assert resolve_policy("uniform").name == "uniform"
+    with pytest.raises(KeyError):
+        get_policy("no-such-policy")
+    with pytest.raises(AssertionError):
+        resolve_policy(object())
+
+
+# ---- ClusterState / Plan invariants ----------------------------------
+def test_cluster_state_is_immutable_snapshot(pool):
+    table = _measured_table(pool, [100.0, 50.0])
+    state = ClusterState.from_table(table, now=3.0,
+                                    backlogs={"n0": 0.5},
+                                    standby=("n1",))
+    with pytest.raises(ValueError):
+        state.perf[0, 0] = 1.0             # read-only array
+    with pytest.raises(TypeError):
+        state.backlog_s["n0"] = 9.9        # mapping proxy
+    # a later table mutation must not leak into the snapshot
+    before = float(state.perf[0, 0])
+    table.scale_node(0, 0.5)
+    assert state.perf[0, 0] == before
+    assert state.standby == {"n1"}
+    assert state.max_backlog_s() == pytest.approx(0.5)
+
+
+def test_plan_predictions_consistent(pool):
+    table = _measured_table(pool, [100.0, 60.0])
+    backlogs = {"n0": 0.3, "n1": 0.1}
+    state = ClusterState.from_table(table, now=2.0, backlogs=backlogs)
+    plan = get_policy("proportional").plan(state, _req(table, 0.4))
+    assert plan.created_s == 2.0
+    for a in plan.dispatch.assignments:
+        if a.items == 0:
+            continue
+        svc = a.items / a.perf_alloc
+        assert plan.node_service_s[a.node] == pytest.approx(svc)
+        assert plan.node_finish_s[a.node] == pytest.approx(
+            2.0 + backlogs[a.node] + svc)
+    assert plan.finish_s == pytest.approx(max(plan.node_finish_s.values()))
+    assert plan.makespan_s == pytest.approx(plan.finish_s - 2.0)
+    assert plan.exec_makespan_s == pytest.approx(
+        max(plan.node_service_s.values()))
+    assert plan.alloc_perf > 0
+    assert plan.feasible
+
+
+# ---- plan-once admission ---------------------------------------------
+@dataclasses.dataclass
+class _CountingPolicy:
+    """Wraps a policy and counts plan() calls (no other change)."""
+    inner: object
+    calls: int = 0
+
+    @property
+    def name(self):
+        return self.inner.name
+
+    def plan(self, state, request):
+        self.calls += 1
+        return self.inner.plan(state, request)
+
+
+def test_admitted_plan_is_dispatched_without_replanning(pool):
+    """Acceptance: the admission decision is made from the policy's own
+    Plan and that exact plan object is dispatched on ADMIT/DEGRADE —
+    one planning pass per admitted request, two per degraded one
+    (original + renegotiated), zero extra between gate and queues."""
+    table = _measured_table(pool, [100.0])
+    counting = _CountingPolicy(get_policy("proportional"))
+    gn = GatewayNode(table, SimBackend(table), policy=counting)
+    r_admit = InferenceRequest(rid=0, num_items=50, perf_req=80.0,
+                               acc_req=0.0, arrival_s=0.0, deadline_s=10.0)
+    # arrives while r_admit still runs; deadline tight enough to force a
+    # degraded (re-planned once) admission, loose enough not to shed
+    r_degrade = InferenceRequest(rid=1, num_items=100, perf_req=100.0,
+                                 acc_req=95.0, arrival_s=0.1,
+                                 deadline_s=1.0)
+    sc = trace_scenario(table, [(0.0, r_admit), (0.1, r_degrade)])
+    adm = AdmissionController(table)
+    rep = OnlineSimulator(gn, sc.arrivals, sc.faults, admission=adm).run()
+
+    assert adm.policy is counting          # gate adopted the GN's policy
+    rec0, rec1 = rep.records
+    assert rec0.admitted and not rec0.degraded_admission
+    assert rec1.admitted and rec1.degraded_admission
+    # 1 plan for the straight admit + 2 for the degraded admit, and the
+    # GN committed exactly those objects (no second planning pass)
+    assert counting.calls == 3
+    assert len(gn.plans) == 2
+    assert rec0.plan is gn.plans[0]
+    assert rec1.plan is gn.plans[1]
+    assert rec0.dispatch is rec0.plan.dispatch
+    assert rec1.dispatch is rec1.plan.dispatch
+    assert rec1.dispatch.request.perf_req > r_degrade.perf_req
+
+
+def test_gate_predicted_makespan_equals_realized(pool):
+    """Plan-once property: under a noise-free SimBackend with no faults,
+    every admitted request's realized makespan (dispatch -> last share
+    completion) and absolute finish time equal the gate plan's
+    predictions exactly."""
+    table = _measured_table(pool, [1000.0, 600.0, 400.0])
+    sc = build_scenario("steady", table, seed=7, horizon_s=15.0, load=0.9)
+    gn = GatewayNode(table, SimBackend(table), policy="proportional")
+    rep = OnlineSimulator(gn, sc.arrivals, sc.faults, scenario=sc.name,
+                          horizon_s=sc.horizon_s,
+                          admission=AdmissionController(table)).run()
+    checked = 0
+    for rec in rep.records:
+        if not rec.admitted or not rec.done or rec.redistributed:
+            continue
+        assert rec.plan is not None
+        assert rec.finish_s == pytest.approx(rec.plan.finish_s, abs=1e-9)
+        assert (rec.finish_s - rec.dispatch_s) == pytest.approx(
+            rec.plan.makespan_s, abs=1e-9)
+        checked += 1
+    assert checked >= 20       # the property must not hold vacuously
+
+
+# ---- SLO classes ------------------------------------------------------
+def test_strict_slo_class_is_shed_not_degraded(pool):
+    """A request the plan can only serve degraded: DEGRADE when
+    degradable (default), REJECT when SLO-strict."""
+    table = _measured_table(pool, [100.0])
+    state = ClusterState.from_table(table, backlogs={"n0": 0.2})
+    soft = InferenceRequest(rid=0, num_items=100, perf_req=100.0,
+                            acc_req=95.0, deadline_s=1.0)
+    hard = dataclasses.replace(soft, slo_class=SLO_STRICT)
+    adm = AdmissionController(table)
+    assert adm.decide(soft, state).outcome == DEGRADE
+    d = adm.decide(hard, state)
+    assert d.outcome == REJECT
+    assert d.reason == "slo_needs_degraded_service"
+    # a strict request the plan serves in time is admitted normally
+    easy = dataclasses.replace(hard, deadline_s=10.0)
+    assert adm.decide(easy, state).outcome == ADMIT
+    # and degrading a strict request programmatically is a bug
+    with pytest.raises(AssertionError):
+        hard.degraded(200.0, 80.0)
+
+
+def test_sampler_strict_frac_marks_requests(pool):
+    from repro.sim.arrivals import PoissonArrivals, RequestSampler
+    table = _measured_table(pool, [100.0, 80.0])
+    arr = PoissonArrivals(20.0, 10.0, RequestSampler(table, strict_frac=0.5),
+                          seed=3).generate()
+    kinds = {r.slo_class for _, r in arr}
+    assert kinds == {"strict", "degradable"}
+    # default sampler (strict_frac=0) marks nothing strict and is
+    # seeded-deterministic (trace determinism itself is pinned in
+    # test_sim; PR 2 traces stay bit-identical because strict_frac=0
+    # draws nothing extra from the generator)
+    a_off = PoissonArrivals(20.0, 10.0, RequestSampler(table),
+                            seed=3).generate()
+    a_off2 = PoissonArrivals(20.0, 10.0, RequestSampler(table),
+                             seed=3).generate()
+    assert all(r.slo_class == "degradable" for _, r in a_off)
+    assert [t for t, _ in a_off] == [t for t, _ in a_off2]
+
+
+# ---- exact_oracle fallback surfacing ---------------------------------
+def test_oracle_fallback_is_surfaced_in_plan_meta(pool):
+    table = _measured_table(pool, [50.0 + 10.0 * i for i in range(9)])
+    req = _req(table, 0.3)
+    state = ClusterState.from_table(table)
+    plan = get_policy("exact_oracle").plan(state, req)       # 9 > 7 nodes
+    assert plan.policy == "exact_oracle"
+    assert plan.dispatch.policy == "exact_oracle"
+    assert plan.meta["fallback"] == "proportional"
+    assert "max_enum_nodes" in plan.meta["reason"]
+    # within enumeration range there is no fallback annotation
+    small = _measured_table(pool, [100.0, 60.0])
+    sp = get_policy("exact_oracle").plan(
+        ClusterState.from_table(small), _req(small, 0.3))
+    assert "fallback" not in sp.meta
+
+
+def test_oracle_fallback_counted_in_sim_summary(pool):
+    table = _measured_table(pool, [50.0 + 10.0 * i for i in range(9)])
+    sc = build_scenario("steady", table, seed=1, horizon_s=3.0)
+    gn = GatewayNode(table, SimBackend(table), policy="exact_oracle")
+    rep = OnlineSimulator(gn, sc.arrivals, sc.faults).run()
+    s = rep.summary()
+    assert s["plan_fallbacks"] == s["completed"] > 0
+
+
+# ---- parked requests re-enter the gate -------------------------------
+def test_parked_requests_reenter_gate_on_reconnect(pool):
+    """A parked request must go back through _admit on reconnect — with a
+    gate present it is re-decided (and counted), not smuggled in."""
+    from repro.sim.simulator import RequestRecord
+    table = _measured_table(pool, [100.0])
+    gn = GatewayNode(table, SimBackend(table), policy="proportional")
+    gn.startup()
+    adm = AdmissionController(table)
+    sim = OnlineSimulator(gn, [], admission=adm)
+    # an admitted-then-parked request, as a total outage would leave it
+    req = InferenceRequest(rid=0, num_items=50, perf_req=80.0, acc_req=0.0,
+                           arrival_s=0.0, deadline_s=10.0)
+    sim.records[0] = RequestRecord(request=req, arrival_s=0.0)
+    sim._parked.append(req)
+    before = dict(adm.counts)
+    sim._reconnect("n0")
+    assert adm.counts[ADMIT] == before[ADMIT] + 1     # re-gated, admitted
+    assert sim.records[0].dispatch is not None
+    assert any("through the gate" in line for line in sim.log)
+
+
+def test_parked_requests_still_served_without_gate(pool):
+    """No admission controller: the PR 1 parked/re-admit path is intact
+    (pinned by test_sim too; re-checked here against the new routing)."""
+    from repro.sim import TimedFault
+    table = _measured_table(pool, [100.0])
+    r0 = InferenceRequest(rid=0, num_items=50, perf_req=10.0, acc_req=0.0,
+                          arrival_s=0.5, deadline_s=1e9)
+    sc = trace_scenario(
+        table, [(0.5, r0)],
+        faults=[TimedFault(time=0.0, kind="disconnect", node="n0"),
+                TimedFault(time=1.0, kind="reconnect", node="n0")])
+    gn = GatewayNode(table, SimBackend(table), policy="proportional")
+    rep = OnlineSimulator(gn, sc.arrivals, sc.faults).run()
+    assert rep.records[0].done
