@@ -21,15 +21,25 @@ degraded-admission count, scale-up count + latency, and mean accuracy.
   autoscale  standby-pool scaling only (every request admitted)
   full       admission + autoscaling
 
+``--scenario fleet-64`` / ``fleet-256`` run the large-fleet
+control-plane stressors over a ``synthetic_fleet`` table of the
+matching size (short per-fleet default horizons; they are excluded from
+``all`` because event counts scale with fleet size).
+
 ``--json`` additionally dumps every row (plus the admission outcome and
-scaling-action detail) as a JSON array — CI uploads this as the nightly
-bench artifact so the metric trajectory is diffable across commits.
-``--bench-json`` (bare, or with an explicit path) also writes a compact
-``BENCH_3.json`` (goodput, p99, shed rate per scenario x policy x
-control cell), by default at the repo root; the committed copy is the
-perf-trajectory anchor future PRs diff against, so only the nightly's
-full sweep shape (``--scenario all --horizon 15``) should refresh it —
-hence the explicit opt-in rather than piggybacking on every ``--json``.
+scaling-action detail, per-run wall-clock, and simulator events/sec) as
+a JSON array — CI uploads this as the nightly bench artifact so the
+metric trajectory is diffable across commits. ``--bench-json`` (bare,
+or with an explicit path) also writes a compact ``BENCH_3.json``
+(goodput, p99, shed rate per scenario x policy x control cell, plus a
+``wall_clock`` section with per-scenario totals and events/sec), by
+default at the repo root; the committed copy is the perf-trajectory
+anchor future PRs diff against, so only the nightly's full sweep shape
+(``--scenario all --horizon 15``) should refresh it — hence the
+explicit opt-in rather than piggybacking on every ``--json``. The
+control-plane microbenchmark trajectory (plans/sec, events/sec vs the
+retained pre-PR implementation) lives next door in ``bench_sched.py``
+-> ``BENCH_4.json``.
 """
 from __future__ import annotations
 
@@ -37,6 +47,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 try:
     import repro  # noqa: F401
@@ -46,12 +57,15 @@ except ModuleNotFoundError:     # run from a checkout without PYTHONPATH=src
 
 from repro.configs import get_config
 from repro.control import AdmissionController, Autoscaler
-from repro.core.cluster import STANDBY_NODES, SimBackend, cluster_nodes
+from repro.core.cluster import (STANDBY_NODES, SimBackend, cluster_nodes,
+                                synthetic_fleet)
 from repro.core.profiling import ProfilingTable
 from repro.core.resource_manager import GatewayNode
 from repro.core.variants import VariantPool
 from repro.sched import registered_policies
-from repro.sim import SCENARIOS, OnlineSimulator, build_scenario
+from repro.sched.policy import REFERENCE_PREFIX
+from repro.sim import (FLEET_HORIZONS, FLEET_SCENARIOS, FLEET_SIZES,
+                       SCENARIOS, OnlineSimulator, build_scenario)
 
 ARCH = "phi4-mini-3.8b"
 CONTROL_MODES = ("none", "admission", "autoscale", "full")
@@ -59,19 +73,28 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_COMPACT = os.path.join(REPO_ROOT, "BENCH_3.json")
 
 
-def _fresh_table(num_standby: int, seq_len: int = 512) -> ProfilingTable:
+def _fresh_table(scenario_name: str, num_standby: int, seed: int,
+                 seq_len: int = 512) -> ProfilingTable:
     """Each run gets its own table: the GN mutates it (straggler EWMA,
     availability, re-profiling), so sharing would leak state. Standby
     slices are present-but-unavailable in *every* mode so the seeded
-    arrival trace is identical across control configurations."""
+    arrival trace is identical across control configurations. Fleet
+    scenarios get a synthetic heterogeneous fleet of the matching size
+    instead of the paper's default 4-board cluster."""
     pool = VariantPool(get_config(ARCH))
-    return ProfilingTable(pool, cluster_nodes(num_standby), seq_len=seq_len)
+    if scenario_name in FLEET_SIZES:
+        nodes = synthetic_fleet(FLEET_SIZES[scenario_name], seed=seed,
+                                num_standby=num_standby)
+    else:
+        nodes = cluster_nodes(num_standby)
+    return ProfilingTable(pool, nodes, seq_len=seq_len)
 
 
 def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
             horizon_s: float, noise_std: float, num_standby: int,
             admission_rate: float, verbose: bool) -> dict:
-    table = _fresh_table(num_standby)
+    t_wall = time.perf_counter()
+    table = _fresh_table(scenario_name, num_standby, seed)
     sc = build_scenario(scenario_name, table, seed=seed,
                         horizon_s=horizon_s)
     gn = GatewayNode(table, SimBackend(table, noise_std=noise_std,
@@ -82,8 +105,8 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
             table, rate=admission_rate if admission_rate > 0 else None)
     autoscaler = None
     if control in ("autoscale", "full") and num_standby > 0:
-        autoscaler = Autoscaler(
-            table, [n.name for n in STANDBY_NODES[:num_standby]])
+        standby_names = [n.name for n in table.nodes if not n.available]
+        autoscaler = Autoscaler(table, standby_names)
     sim = OnlineSimulator(gn, sc.arrivals, sc.faults,
                           scenario=sc.name, horizon_s=sc.horizon_s,
                           admission=admission, autoscaler=autoscaler)
@@ -111,13 +134,23 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
         {"kind": a.kind, "node": a.node, "decided_s": a.decided_s,
          "ready_s": a.ready_s, "reason": a.reason}
         for a in report.scaling]
+    # control-plane wall-clock: the whole cell (table build + trace +
+    # sim) and the event loop alone — the trajectory BENCH_4.json anchors
+    row["wall_clock_s"] = time.perf_counter() - t_wall
+    row["sim_wall_s"] = report.wall_s
+    row["sim_events"] = report.n_events
+    row["events_per_sec"] = report.n_events / max(report.wall_s, 1e-9)
     return row
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scenario", default="steady",
-                    help=f"one of {sorted(SCENARIOS)} or 'all'")
+                    help=f"one of {sorted(SCENARIOS)}, a fleet scenario "
+                         f"({sorted(FLEET_SCENARIOS)}), or 'all' (the "
+                         "classic grid; fleet scenarios run only when "
+                         "named explicitly — their event counts scale "
+                         "with fleet size)")
     policy_names = registered_policies()
     ap.add_argument("--policies", default=",".join(policy_names),
                     help="comma-separated subset of "
@@ -133,8 +166,10 @@ def main(argv=None) -> int:
                          "(<=0 disables rate shaping; the SLO-feasibility "
                          "gate always runs)")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--horizon", type=float, default=30.0,
-                    help="arrival horizon in sim-seconds")
+    ap.add_argument("--horizon", type=float, default=None,
+                    help="arrival horizon in sim-seconds (default: 30, "
+                         "or the per-fleet default for fleet scenarios "
+                         f"— {FLEET_HORIZONS})")
     ap.add_argument("--noise", type=float, default=0.0,
                     help="execution-time noise std (SimBackend)")
     ap.add_argument("--json", default="",
@@ -155,26 +190,36 @@ def main(argv=None) -> int:
     scenario_names = (sorted(SCENARIOS) if args.scenario == "all"
                       else [args.scenario])
     for s in scenario_names:
-        if s not in SCENARIOS:
-            ap.error(f"unknown scenario {s!r}; have {sorted(SCENARIOS)} "
-                     "or 'all'")
+        if s not in SCENARIOS and s not in FLEET_SCENARIOS:
+            ap.error(f"unknown scenario {s!r}; have {sorted(SCENARIOS)}, "
+                     f"{sorted(FLEET_SCENARIOS)}, or 'all'")
     policies = [p.strip() for p in args.policies.split(",") if p.strip()]
     if not policies:
         ap.error("--policies must name at least one policy "
                  f"from {sorted(policy_names)}")
     for p in policies:
-        if p not in policy_names:
-            ap.error(f"unknown policy {p!r}; have {sorted(policy_names)}")
+        # reference:<name> rows measure the retained pre-PR planners
+        base = p[len(REFERENCE_PREFIX):] if p.startswith(REFERENCE_PREFIX) \
+            else p
+        if base not in policy_names:
+            ap.error(f"unknown policy {p!r}; have {sorted(policy_names)} "
+                     f"(optionally prefixed with {REFERENCE_PREFIX!r})")
     controls = [c.strip() for c in args.control.split(",") if c.strip()]
     if not controls:
         ap.error(f"--control must name at least one of {CONTROL_MODES}")
     for c in controls:
         if c not in CONTROL_MODES:
             ap.error(f"unknown control mode {c!r}; have {CONTROL_MODES}")
-    if args.horizon <= 0:
+    if args.horizon is not None and args.horizon <= 0:
         ap.error("--horizon must be > 0 sim-seconds")
-    if not 0 <= args.standby <= len(STANDBY_NODES):
-        ap.error(f"--standby must be in 0..{len(STANDBY_NODES)}")
+    fleet_only = all(s in FLEET_SCENARIOS for s in scenario_names)
+    if args.standby < 0:
+        ap.error("--standby must be >= 0")
+    if not fleet_only and args.standby > len(STANDBY_NODES):
+        # classic cluster standby comes from the fixed STANDBY_NODES
+        # pool; fleet tables synthesize any number of standby slices
+        ap.error(f"--standby must be in 0..{len(STANDBY_NODES)} for "
+                 "non-fleet scenarios")
     if args.standby == 0 and any(c in ("autoscale", "full")
                                  for c in controls):
         ap.error("--standby 0 leaves the autoscaler with an empty pool; "
@@ -190,10 +235,13 @@ def main(argv=None) -> int:
     print(",".join(cols))
     rows = []
     for sname in scenario_names:
+        horizon = args.horizon
+        if horizon is None:
+            horizon = FLEET_HORIZONS.get(sname, 30.0)
         for policy in policies:
             for control in controls:
                 row = run_one(sname, policy, control, seed=args.seed,
-                              horizon_s=args.horizon,
+                              horizon_s=horizon,
                               noise_std=args.noise,
                               num_standby=args.standby,
                               admission_rate=args.admission_rate,
@@ -224,10 +272,12 @@ def main(argv=None) -> int:
 
 def write_bench_compact(rows, args, path: str = BENCH_COMPACT):
     """Compact perf-trajectory artifact: one goodput/p99/shed triple per
-    scenario x policy x control cell. The committed BENCH_3.json is this
-    file for the nightly sweep's shape (--scenario all --horizon 15
-    --bench-json); CI uploads the fresh copy so regressions are a
-    two-line diff."""
+    scenario x policy x control cell, plus control-plane wall-clock
+    aggregates (per scenario and total — the serving-metric cells stay
+    machine-independent, the wall_clock section is the host-speed
+    trajectory). The committed BENCH_3.json is this file for the nightly
+    sweep's shape (--scenario all --horizon 15 --bench-json); CI uploads
+    the fresh copy so regressions are a two-line diff."""
     cells = {
         f"{r['scenario']}/{r['policy']}/{r['control']}": {
             "goodput_rps": round(r["goodput_rps"], 3),
@@ -235,14 +285,27 @@ def write_bench_compact(rows, args, path: str = BENCH_COMPACT):
             "shed_rate": round(r["shed_rate"], 4),
         }
         for r in rows}
+    per_scenario: dict = {}
+    for r in rows:
+        per_scenario[r["scenario"]] = round(
+            per_scenario.get(r["scenario"], 0.0) + r["wall_clock_s"], 3)
+    total_events = sum(r["sim_events"] for r in rows)
+    total_sim_wall = sum(r["sim_wall_s"] for r in rows)
     out = {
         "bench": "run_sim",
         "arch": ARCH,
         "seed": args.seed,
-        "horizon_s": args.horizon,
+        "horizon_s": args.horizon if args.horizon is not None else 30.0,
         "standby": args.standby,
         "noise_std": args.noise,
         "cells": cells,
+        "wall_clock": {
+            "per_scenario_s": per_scenario,
+            "total_s": round(sum(r["wall_clock_s"] for r in rows), 3),
+            "events": int(total_events),
+            "events_per_sec": round(
+                total_events / max(total_sim_wall, 1e-9), 1),
+        },
     }
     with open(path, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)

@@ -57,6 +57,33 @@ def cluster_nodes(num_standby: int = 0) -> List[NodeProfile]:
     return base
 
 
+# chip-count menu for synthetic fleets: sub-mesh slice sizes from a 1x16
+# row up to a 6x16 block, the same granularity partition_pod carves
+_FLEET_CHIP_CHOICES = (16, 32, 48, 64, 80, 96)
+
+
+def synthetic_fleet(num_nodes: int, *, seed: int = 0,
+                    num_standby: int = 0) -> List[NodeProfile]:
+    """Deterministic heterogeneous fleet far beyond the paper's 3-4 boards.
+
+    Node j gets a seeded random slice size and a capability derate in
+    [0.6, 1.0] (thermal throttle / generation spread), mirroring the
+    paper's XU4/Pi4/Nano skew at 64- and 256-node scale. The trailing
+    ``num_standby`` nodes start unavailable (the autoscaler's pool),
+    like ``STANDBY_NODES`` in the default cluster.
+    """
+    assert num_nodes >= 1 and num_standby >= 0
+    rng = np.random.default_rng(seed)
+    nodes = [NodeProfile(f"fleet-{j:03d}",
+                         chips=int(rng.choice(_FLEET_CHIP_CHOICES)),
+                         capability=float(np.round(rng.uniform(0.6, 1.0), 3)))
+             for j in range(num_nodes)]
+    nodes += [NodeProfile(f"fleet-standby-{k:02d}", chips=64,
+                          capability=1.0, available=False)
+              for k in range(num_standby)]
+    return nodes
+
+
 @dataclasses.dataclass
 class StragglerEvent:
     node: str
@@ -75,12 +102,22 @@ class SimBackend:
         # node membership/order is fixed for a table's lifetime (only perf
         # values and availability mutate), so the index map is cacheable
         self._node_idx = {n.name: j for j, n in enumerate(table.nodes)}
+        self._straggler_rev = 0
+
+    @property
+    def pred_version(self) -> Tuple[int, int]:
+        """Monotone key over everything ``predicted_time`` reads (table
+        perf + straggler derates). Queue-backlog caches revalidate their
+        per-share predictions exactly when this changes."""
+        return (self.table.version, self._straggler_rev)
 
     def set_straggler(self, node: str, slowdown: float):
         self.stragglers[node] = slowdown
+        self._straggler_rev += 1
 
     def clear_stragglers(self):
         self.stragglers.clear()
+        self._straggler_rev += 1
 
     def predicted_time(self, a: "Assignment") -> float:
         """Deterministic service-time *prediction* for one share: table

@@ -61,13 +61,20 @@ def variant_item_cost(cfg: ModelConfig, seq_len: int) -> Dict[str, float]:
     return {"flops": flops, "bytes": bytes_}
 
 
-def analytic_throughput(cfg: ModelConfig, seq_len: int, chips: int,
-                        capability: float) -> float:
-    """Roofline-model items/s for one node running this variant."""
-    cost = variant_item_cost(cfg, seq_len)
+def throughput_from_cost(cost: Dict[str, float], chips: int,
+                         capability: float) -> float:
+    """Roofline items/s from a precomputed per-item cost — the cost is
+    per *variant*, so table builds hoist it out of the per-node loop."""
     t_compute = cost["flops"] / (PEAK_FLOPS * chips * capability)
     t_memory = cost["bytes"] / (HBM_BW * chips * capability)
     return 1.0 / max(t_compute, t_memory)
+
+
+def analytic_throughput(cfg: ModelConfig, seq_len: int, chips: int,
+                        capability: float) -> float:
+    """Roofline-model items/s for one node running this variant."""
+    return throughput_from_cost(variant_item_cost(cfg, seq_len),
+                                chips, capability)
 
 
 class ProfilingTable:
@@ -86,14 +93,19 @@ class ProfilingTable:
         else:
             self.perf = np.zeros((m, n))
             for i, v in enumerate(pool.variants):
+                cost = variant_item_cost(v.config, seq_len)
                 for j, node in enumerate(self.nodes):
-                    self.perf[i, j] = analytic_throughput(
-                        v.config, seq_len, node.chips, node.capability)
+                    self.perf[i, j] = throughput_from_cost(
+                        cost, node.chips, node.capability)
         self.accuracies = np.asarray(pool.accuracies)
         # pristine copy: what a fresh PROFILE of each node would measure.
         # reprofile_node restores from it when a node (re)joins the serving
         # set, erasing stale runtime decay (straggler EWMA) from a past life.
         self._pristine = self.perf.copy()
+        # monotone counter bumped on every perf mutation; snapshot and
+        # planner caches key on it so they refresh exactly when the table
+        # actually changed (every mutation goes through the methods below)
+        self.version = 0
 
     @property
     def num_levels(self) -> int:
@@ -108,16 +120,19 @@ class ProfilingTable:
         profiled column is ground truth, so the pristine copy tracks it."""
         self.perf[:, j] = column
         self._pristine[:, j] = column
+        self.version += 1
 
     def scale_node(self, j: int, factor: float):
         """Straggler mitigation: EWMA capability decay observed at runtime."""
         self.perf[:, j] *= factor
+        self.version += 1
 
     def reprofile_node(self, j: int):
         """Re-run node j's PROFILE step on (re)join: restore the pristine
         measured/analytic column so stale EWMA decay does not outlive the
         node's previous membership."""
         self.perf[:, j] = self._pristine[:, j]
+        self.version += 1
 
     def available_columns(self, avail: Sequence[bool]) -> np.ndarray:
         return self.perf[:, np.asarray(avail, dtype=bool)]

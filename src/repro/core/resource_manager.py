@@ -23,7 +23,7 @@ from repro.core.cluster import SimBackend
 from repro.core.profiling import NodeProfile, ProfilingTable
 from repro.core.requests import (Dispatch, ExecutionResult, InferenceRequest,
                                  violation_summary)
-from repro.sched import ClusterState, Plan, Policy, resolve_policy
+from repro.sched import ClusterState, Plan, Policy, SnapshotCache, resolve_policy
 
 
 class GNState(enum.Enum):
@@ -92,15 +92,23 @@ class GatewayNode:
 
     def __init__(self, table: ProfilingTable, backend: SimBackend,
                  policy: Union[str, Policy] = "proportional", *,
-                 straggler_ewma: float = 0.5):
+                 straggler_ewma: float = 0.5,
+                 snapshot_caching: bool = True):
         self.table = table
         self.backend = backend
+        # copy-on-write snapshots: one frozen profiling view shared across
+        # snapshots until the table's version says it mutated. False
+        # forces a full copy per snapshot (the pre-PR baseline the bench
+        # measures against; it also leaves Plan memo keys unset)
+        self._snap_cache = SnapshotCache() if snapshot_caching else None
         self.policy_obj: Policy = resolve_policy(policy)
         self.policy: str = self.policy_obj.name   # registry name (reports)
         self.state = GNState.PROFILE
         self.log: List[GNState] = [self.state]
         self.locals: Dict[str, LocalNode] = {
             n.name: LocalNode(n) for n in table.nodes}
+        self._name_idx: Dict[str, int] = {
+            n.name: j for j, n in enumerate(table.nodes)}
         self.results: List[ExecutionResult] = []
         self.dispatches: List[Dispatch] = []
         self.plans: List[Plan] = []
@@ -163,7 +171,13 @@ class GatewayNode:
         """Freeze the cluster into an immutable ClusterState: the pruned
         profiling view, availability, per-node backlog seconds, the
         autoscaler's standby set, and the sim time. This is the only
-        thing a policy (or the admission gate) ever reads."""
+        thing a policy (or the admission gate) ever reads. Snapshots are
+        copy-on-write: the heavy arrays are shared until a table mutation
+        bumps ``ProfilingTable.version``."""
+        if self._snap_cache is not None:
+            return self._snap_cache.snapshot(self.table, now=now,
+                                             backlogs=backlogs,
+                                             standby=tuple(standby))
         return ClusterState.from_table(self.table, now=now,
                                        backlogs=backlogs,
                                        standby=tuple(standby))
@@ -223,14 +237,13 @@ class GatewayNode:
         return self._handle_workload(request, now=now)
 
     def _apply_straggler_feedback(self, d: Dispatch, r: ExecutionResult):
-        names = [n.name for n in self.table.nodes]
         for a in d.assignments:
             if a.items == 0:
                 continue
             observed_t = r.per_node_time.get(a.node)
             if observed_t is None or observed_t <= 0:
                 continue
-            j = names.index(a.node)
+            j = self._name_idx[a.node]
             predicted_t = a.items / max(self.table.perf[a.apx_level, j], 1e-9)
             ratio = predicted_t / observed_t          # <1 means slower
             if ratio < 0.95:

@@ -26,6 +26,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.make_mesh(shape, axes, **_auto_kw(len(axes)))
 
 
+def make_abstract_mesh(shape, axes) -> "jax.sharding.AbstractMesh":
+    """Version-portable AbstractMesh: jax >= 0.5 takes
+    ``AbstractMesh(axis_sizes, axis_names)``, while 0.4.x wants one
+    ``((name, size), ...)`` shape tuple. Lets the 16x16 sharding rules
+    be unit-tested on a 1-CPU box under either signature."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / CPU smoke)."""
     n = jax.device_count()

@@ -19,11 +19,12 @@ from repro.sched.policies import (Asymmetric, ExactOracle, Proportional,
                                   Uniform, UniformApx)
 from repro.sched.policy import (Policy, get_policy, register_policy,
                                 registered_policies, resolve_policy)
-from repro.sched.state import ClusterState
+from repro.sched.reference import ReferencePolicy
+from repro.sched.state import ClusterState, SnapshotCache
 
 __all__ = [
-    "ClusterState", "Plan", "Policy",
+    "ClusterState", "SnapshotCache", "Plan", "Policy",
     "register_policy", "registered_policies", "get_policy",
-    "resolve_policy",
+    "resolve_policy", "ReferencePolicy",
     "Uniform", "UniformApx", "Asymmetric", "Proportional", "ExactOracle",
 ]

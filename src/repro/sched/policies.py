@@ -12,22 +12,33 @@ Paper §III-C (Algorithm 1) + the comparison baselines (§II-A, §IV-B):
   * ``exact_oracle``  — beyond-paper: exact enumeration maximising achieved
                         accuracy subject to sum(perf) >= perf_req; used to
                         measure Algorithm 1's optimality gap. Beyond
-                        ``max_enum_nodes`` it falls back to the paper
-                        heuristic and says so in ``Plan.meta['fallback']``.
+                        ``max_enum_nodes`` it tries dominated-level pruning
+                        first and falls back to the paper heuristic only
+                        when even the pruned grid exceeds its combo budget
+                        (and says so in ``Plan.meta['fallback']``).
 
 All policies consume only the immutable ClusterState snapshot — they are
 platform-agnostic, exactly as in the paper, and can never mutate the live
 ProfilingTable through a side channel.
+
+Performance: this module is the per-request hot path (DistrEdge's point
+that the distribution step must be cheap enough to run per request), so
+the planners are vectorized and memoized against the snapshot's
+``plan_key`` — see the module docstring of :mod:`repro.sched.reference`
+(the retained pre-optimization implementation these are proven
+bit-identical to) and repro/sched/README.md §Performance.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import types
-from typing import Mapping, Optional
+from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
 from repro.core.requests import Assignment, Dispatch, InferenceRequest
+from repro.sched import reference
 from repro.sched.plan import Plan
 from repro.sched.policy import register_policy
 from repro.sched.state import ClusterState
@@ -47,47 +58,62 @@ def _mk_plan(state: ClusterState, request: InferenceRequest,
     """Build a Plan from per-node levels: workload split proportional to
     the selected per-node throughput (Algorithm 1 lines 15-16), plus the
     predicted per-node finish times / makespan the gate decides on."""
-    perfs = np.array([state.perf[levels[j], avail_idx[j]]
-                      for j in range(len(avail_idx))])
+    perfs = state.perf[levels, avail_idx]
+    perf_sum = perfs.sum()
     if shares is None:
-        shares = (perfs / perfs.sum() if perfs.sum() > 0
+        shares = (perfs / perf_sum if perf_sum > 0
                   else np.ones_like(perfs) / len(perfs))
-    items = np.floor(request.num_items * shares).astype(int)
-    # distribute the remainder to the fastest nodes
-    rem = request.num_items - items.sum()
-    order = np.argsort(-perfs)
-    for i in range(rem):
-        items[order[i % len(order)]] += 1
-    assignments = tuple(
-        Assignment(node=state.names[avail_idx[j]],
-                   items=int(items[j]), apx_level=int(levels[j]),
-                   perf_alloc=float(perfs[j]))
-        for j in range(len(avail_idx)))
-    dispatch = Dispatch(request=request, assignments=assignments,
-                        policy=policy)
+    num_items = request.num_items
+    # per-element double multiply + floor: same IEEE ops as the
+    # reference's np.floor(num_items * shares) — plain-python loops beat
+    # ufunc dispatch at these widths
+    item_l = [int(num_items * s // 1) for s in shares.tolist()]
+    # distribute the remainder to the fastest nodes; kind="stable" so
+    # equal-perf nodes receive it in index order on every platform
+    rem = num_items - sum(item_l)
+    if rem > 0:
+        order = np.argsort(-perfs, kind="stable").tolist()
+        n_avail = len(order)
+        for i in range(rem):
+            item_l[order[i % n_avail]] += 1
 
+    # one fused pass over plain-python values (ndarray scalar indexing per
+    # node costs more than the whole loop); float results are identical to
+    # the reference's per-field loops — same ops, same order
+    names = state.names
+    backlog = state.backlog_s
     now = state.now_s
+    level_l = levels.tolist()
+    perf_l = perfs.tolist()
+    acc_l = state.accuracies.tolist()
+    assignments = []
     service: dict = {}
     finish: dict = {}
-    for a in assignments:
-        if a.items == 0:
+    total_acc = 0.0
+    for j, col in enumerate(avail_idx.tolist()):
+        it, lv, pf, node = item_l[j], level_l[j], perf_l[j], names[col]
+        assignments.append(Assignment(node=node, items=it,
+                                      apx_level=lv, perf_alloc=pf))
+        total_acc += it * acc_l[lv]
+        if it == 0:
             continue                    # empty shares are never enqueued
-        t = a.items / max(a.perf_alloc, 1e-9)
-        service[a.node] = t
-        finish[a.node] = now + state.backlog_of(a.node) + t
+        t = it / max(pf, 1e-9)
+        service[node] = t
+        finish[node] = now + backlog.get(node, 0.0) + t
+    assignments = tuple(assignments)
+    dispatch = Dispatch(request=request, assignments=assignments,
+                        policy=policy)
     exec_makespan = max(service.values(), default=0.0)
     finish_s = max(finish.values(), default=now)
-    total_acc = sum(a.items * float(state.accuracies[a.apx_level])
-                    for a in assignments)
     return Plan(
         dispatch=dispatch, policy=policy, created_s=now,
         node_service_s=types.MappingProxyType(service),
         node_finish_s=types.MappingProxyType(finish),
         exec_makespan_s=exec_makespan,
         makespan_s=finish_s - now, finish_s=finish_s,
-        alloc_perf=float(perfs.sum()),
+        alloc_perf=float(perf_sum),
         predicted_acc=total_acc / max(request.num_items, 1),
-        feasible=bool(perfs.sum() >= request.perf_req * (1 - 1e-9)),
+        feasible=bool(perf_sum >= request.perf_req * (1 - 1e-9)),
         meta=types.MappingProxyType(dict(meta or {})))
 
 
@@ -118,14 +144,11 @@ class UniformApx:
         n = len(idx)
         per_node = (request.perf_req / n) * (
             1.0 + self.margin + n / max(request.num_items, 1))
-        levels = np.empty(n, dtype=int)
-        for j, col in enumerate(idx):
-            lv = state.num_levels - 1
-            for m in range(state.num_levels):
-                if state.perf[m, col] >= per_node:
-                    lv = m
-                    break
-            levels[j] = lv
+        # first (least-approximate) level meeting the per-node share; the
+        # deepest level when none does
+        hit = state.available_perf >= per_node            # (levels, n)
+        levels = np.where(hit.any(axis=0), hit.argmax(axis=0),
+                          state.num_levels - 1)
         shares = np.ones(n) / n
         return _mk_plan(state, request, idx, levels, self.name, shares)
 
@@ -160,71 +183,102 @@ class Proportional:
                approximation while the cluster still meets perf_req,
                preferring moves that keep each board closest to its target.
     Lines 15-16: split items proportional to the selected throughputs.
+
+    The DP result is memoized on ``(plan_key, target)``: the level
+    vector depends on the request only through the margin-adjusted
+    throughput target, so steady-state traffic (recurring request
+    classes against an unchanged cluster) plans from cache and pays only
+    the O(n) plan assembly. Snapshots without a ``plan_key`` (hand-built
+    ``from_table`` states) always plan cold.
     """
     name: str = "proportional"
     margin: float = 0.02
+    _dp_cache: Dict = dataclasses.field(default_factory=dict,
+                                        repr=False, compare=False)
+
+    _DP_CACHE_MAX = 4096
 
     def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
         idx = _avail(state)
-        pruned = state.perf[:, idx]                    # lines 3-5
         n = len(idx)
         # headroom over perf_req: integer workload splits quantise the
         # makespan by O(n/items), so small batches need more margin
         target = request.perf_req * (
             1.0 + self.margin + n / max(request.num_items, 1))
 
+        key = None
+        pk = state.plan_key
+        if pk is not None:
+            key = (pk, target)
+            levels = self._dp_cache.get(key)
+            if levels is not None:
+                return _mk_plan(state, request, idx, levels, self.name)
+
+        pruned = state.available_perf                  # lines 3-5
         perf_vector = pruned.sum(axis=1)               # lines 6-7
-        cutoff = state.num_levels - 1
-        for m in range(state.num_levels):
-            if perf_vector[m] >= target:               # line 8
-                cutoff = m
-                break
+        meets = np.flatnonzero(perf_vector >= target)  # line 8
+        cutoff = int(meets[0]) if meets.size else state.num_levels - 1
         pruned = pruned[:cutoff + 1]                   # lines 10-11
 
         perf_b_req = target * pruned[0] / perf_vector[0]   # lines 12-13
 
         levels = _subset_sum_dp(pruned, perf_b_req, target)  # line 14
+        if key is not None:
+            if len(self._dp_cache) >= self._DP_CACHE_MAX:
+                self._dp_cache.clear()
+            levels.flags.writeable = False
+            self._dp_cache[key] = levels
         return _mk_plan(state, request, idx, levels, self.name)
 
 
 def _subset_sum_dp(pruned: np.ndarray, perf_b_req: np.ndarray,
                    perf_req: float) -> np.ndarray:
-    """The paper's DP_alg: O(n*m) recursive search over the pruned table.
+    """The paper's DP_alg, restructured around a priority queue.
 
-    Start at the deepest remaining approximation row (which meets perf_req
-    by construction of the cutoff) and back-propagate row-by-row: lift a
-    board to a less-approximate row whenever the cluster total still meets
-    perf_req; boards whose recorded perf is already below their target are
-    lifted last (they lose the most throughput by lifting)."""
+    Reference semantics (``reference.subset_sum_dp_ref``): start at the
+    deepest remaining row and repeatedly lift the candidate board that is
+    first in stable (key, board) order — key = lift loss minus slack over
+    the per-board target — whenever the cluster total stays >= perf_req.
+
+    For a monotone ladder (deeper approximation never slower, the shape
+    every profiling table here has) that rebuild-and-sort loop collapses
+    to one heap walk: every lift loss is >= 0 so the cluster total only
+    decreases, meaning a candidate that once failed the feasibility check
+    can never pass it later (drop it for good), and a board's key only
+    grows as it lifts (push its next step and the heap order stays
+    correct). Identical output, O(lifts * log n) instead of
+    O(rounds * n log n) — pinned against the reference by the seeded
+    property test. Non-monotone tables (a lift that *gains* throughput
+    breaks both invariants) take the reference path.
+    """
     m, n = pruned.shape
     levels = np.full(n, m - 1, dtype=int)
     total = pruned[m - 1].sum()
-    if total < perf_req:
+    if total < perf_req or m == 1:
         # infeasible even at the deepest remaining approximation:
         # best-effort max-throughput (no lifting)
         return levels
+    if not np.all(pruned[1:] >= pruned[:-1]):
+        return reference.subset_sum_dp_ref(pruned, perf_b_req, perf_req)
 
-    improved = True
-    while improved:
-        improved = False
-        # candidate lifts: (throughput loss, board) — lift cheapest first,
-        # preferring boards furthest above their per-board target
-        cands = []
-        for j in range(n):
-            if levels[j] == 0:
-                continue
-            cur = pruned[levels[j], j]
-            up = pruned[levels[j] - 1, j]
-            loss = cur - up
-            slack = cur - perf_b_req[j]
-            cands.append((loss - slack, loss, j))
-        for _, loss, j in sorted(cands, key=lambda t: t[0]):
-            if total - loss >= perf_req:
-                levels[j] -= 1
-                total -= loss
-                improved = True
-                break
-    return levels
+    cur0 = pruned[m - 1]
+    loss0 = cur0 - pruned[m - 2]
+    key0 = loss0 - (cur0 - perf_b_req)
+    heap = list(zip(key0.tolist(), range(n), loss0.tolist()))
+    heapq.heapify(heap)
+    lvl = levels.tolist()               # scalar ndarray writes are slow
+    while heap:
+        _, j, loss = heapq.heappop(heap)
+        if total - loss < perf_req:
+            continue                    # total never grows: dead forever
+        lvl[j] -= 1
+        total -= loss
+        if lvl[j] > 0:
+            cur = pruned[lvl[j], j]
+            up = pruned[lvl[j] - 1, j]
+            nl = cur - up
+            heapq.heappush(heap, (nl - (cur - perf_b_req[j]), j, nl))
+    return np.array(lvl, dtype=int)
 
 
 # ----------------------------------------------------------------------
@@ -238,42 +292,117 @@ class ExactOracle:
 
     subject to sum_i p_i(L) >= perf_req (best-effort max-perf when
     infeasible). Vectorised enumeration, O(m^n) — exact up to
-    ``max_enum_nodes`` nodes (6^7 ~ 280k combos). Beyond that it falls
-    back to the paper heuristic and records
+    ``max_enum_nodes`` nodes (6^7 ~ 280k combos). Beyond that it prunes
+    *dominated* levels first — level l is useless for node j when a
+    less-approximate level has the identical throughput (saturated
+    ladder rows), so substituting changes nothing but accuracy, upward —
+    and still enumerates exactly when the pruned grid fits
+    ``max_enum_combos`` (``Plan.meta['enum'] = 'dominated_pruned'``).
+    Only past that budget does it fall back to the paper heuristic,
+    recording
     ``Plan.meta['fallback'] = 'proportional'`` so optimality-gap numbers
-    can't silently include heuristic rows (EXPERIMENTS.md §Perf)."""
+    can't silently include heuristic rows (EXPERIMENTS.md §Perf).
+
+    The enumeration tensors (combos, per-combo totals and weighted
+    accuracies) depend only on the profiling view, so they are cached on
+    ``ClusterState.plan_key`` — per plan, only the feasibility mask and
+    the arg-max selection run.
+    """
     name: str = "exact_oracle"
     max_enum_nodes: int = 7
+    max_enum_combos: int = 6 ** 7
+    _enum_cache: Dict = dataclasses.field(default_factory=dict,
+                                          repr=False, compare=False)
+    # one shared fallback planner, so heuristic plans on large fleets
+    # reuse its DP memo instead of re-solving per request
+    _fallback: Proportional = dataclasses.field(
+        default_factory=Proportional, repr=False, compare=False)
+
+    _ENUM_CACHE_MAX = 4          # entries are MB-scale tensors
 
     def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
         idx = _avail(state)
-        pruned = state.perf[:, idx]
+        pruned = state.available_perf
         acc = state.accuracies
         m, n = pruned.shape
-        if n > self.max_enum_nodes:
-            fb = Proportional().plan(state, request)
-            return dataclasses.replace(
-                fb,
-                dispatch=Dispatch(request=fb.dispatch.request,
-                                  assignments=fb.dispatch.assignments,
-                                  policy=self.name),
-                policy=self.name,
-                meta=types.MappingProxyType(
-                    {"fallback": "proportional",
-                     "reason": f"n={n} > max_enum_nodes="
-                               f"{self.max_enum_nodes}"}))
+        meta: Optional[Dict[str, object]] = None
+        if n <= self.max_enum_nodes:
+            cands = [np.arange(m)] * n
+        else:
+            cands = _non_dominated_levels(pruned)
+            budget = self.max_enum_combos
+            for c in cands:
+                budget //= len(c)
+            if budget == 0:             # prod(len(c)) > max_enum_combos
+                fb = self._fallback.plan(state, request)
+                return dataclasses.replace(
+                    fb,
+                    dispatch=Dispatch(request=fb.dispatch.request,
+                                      assignments=fb.dispatch.assignments,
+                                      policy=self.name),
+                    policy=self.name,
+                    meta=types.MappingProxyType(
+                        {"fallback": "proportional",
+                         "reason": f"n={n} > max_enum_nodes="
+                                   f"{self.max_enum_nodes} and pruned grid"
+                                   f" > max_enum_combos="
+                                   f"{self.max_enum_combos}"}))
+            meta = {"enum": "dominated_pruned", "n": n}
 
-        grids = np.meshgrid(*([np.arange(m)] * n), indexing="ij")
-        combos = np.stack([g.reshape(-1) for g in grids], axis=1)  # (m^n, n)
-        perfs = pruned[combos, np.arange(n)[None, :]]              # (m^n, n)
-        total = perfs.sum(axis=1)
-        wacc = (perfs * acc[combos]).sum(axis=1) / total
+        combos, total, wacc = self._enumerate(state, pruned, acc, cands)
         feasible = total >= request.perf_req * 1.02
         if feasible.any():
-            cand = np.where(feasible)[0]
-            # max accuracy; tie-break on max throughput
-            best = cand[np.lexsort((-total[cand], -wacc[cand]))[0]]
+            cand = np.flatnonzero(feasible)
+            # max accuracy; tie-break on max throughput, then first combo
+            w = wacc[cand]
+            sel = cand[w == w.max()]
+            best = int(sel[np.argmax(total[sel])])
         else:
             best = int(np.argmax(total))
         levels = combos[best]
-        return _mk_plan(state, request, idx, levels.astype(int), self.name)
+        return _mk_plan(state, request, idx, levels.astype(int), self.name,
+                        meta=meta)
+
+    def _enumerate(self, state: ClusterState, pruned: np.ndarray,
+                   acc: np.ndarray, cands) -> Tuple[np.ndarray, ...]:
+        """(combos, per-combo total perf, per-combo weighted accuracy),
+        cached per profiling view — request-independent."""
+        key = state.plan_key
+        if key is not None:
+            hit = self._enum_cache.get(key)
+            if hit is not None:
+                return hit
+        n = pruned.shape[1]
+        grids = np.meshgrid(*cands, indexing="ij")
+        combos = np.stack([g.reshape(-1) for g in grids], axis=1)
+        perfs = pruned[combos, np.arange(n)[None, :]]       # (combos, n)
+        total = perfs.sum(axis=1)
+        wacc = (perfs * acc[combos]).sum(axis=1) / total
+        out = (combos, total, wacc)
+        if key is not None:
+            if len(self._enum_cache) >= self._ENUM_CACHE_MAX:
+                self._enum_cache.clear()
+            self._enum_cache[key] = out
+        return out
+
+
+def _non_dominated_levels(pruned: np.ndarray) -> list:
+    """Per-node candidate levels after dominated-level pruning: drop
+    level l for node j when a less-approximate level has the *same*
+    throughput (accuracy strictly decreases with depth, so the shallower
+    twin is better on one objective and equal on the other — swapping
+    never changes feasibility and never lowers the weighted accuracy).
+
+    Equal throughput is required, not merely >=: the oracle maximises a
+    perf-*weighted* accuracy ratio, and raising the weight of a
+    below-average-accuracy node can lower the ratio even at higher
+    per-node accuracy — a strictly-slower deep level can be the true
+    optimum, so only exact duplicates are safe to remove."""
+    m, n = pruned.shape
+    keep = np.ones((m, n), dtype=bool)
+    if m > 1:
+        # level l duplicates a shallower level iff its throughput equals
+        # some earlier row's (throughputs are checked per node)
+        for l in range(1, m):
+            keep[l] = ~(pruned[:l] == pruned[l]).any(axis=0)
+    return [np.flatnonzero(keep[:, j]) for j in range(n)]

@@ -58,9 +58,19 @@ def get_policy(name: str, **kwargs) -> Policy:
     return _REGISTRY[name](**kwargs)
 
 
+# name prefix routing to the retained pre-optimization planners in
+# repro.sched.reference — `GatewayNode(policy="reference:proportional")`
+# or `run_sim.py --policies` rows measured as the pre-PR baseline
+REFERENCE_PREFIX = "reference:"
+
+
 def resolve_policy(policy: Union[str, Policy]) -> Policy:
-    """Accept either a registry name or a ready Policy instance."""
+    """Accept a registry name, a ``reference:<name>`` baseline name, or
+    a ready Policy instance."""
     if isinstance(policy, str):
+        if policy.startswith(REFERENCE_PREFIX):
+            from repro.sched.reference import ReferencePolicy
+            return ReferencePolicy(policy[len(REFERENCE_PREFIX):])
         return get_policy(policy)
     assert hasattr(policy, "plan") and hasattr(policy, "name"), (
         f"not a Policy: {policy!r}")

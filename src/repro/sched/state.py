@@ -20,6 +20,7 @@ a parallel heuristic (see repro/sched/README.md).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import types
 from typing import FrozenSet, Mapping, Optional, Tuple
 
@@ -50,6 +51,12 @@ class ClusterState:
     accuracies: np.ndarray               # (levels,), read-only
     backlog_s: Mapping[str, float]
     standby: FrozenSet[str] = frozenset()
+    # Opaque hashable token identifying the profiling view, set by
+    # SnapshotCache as (cache instance, table version) so two tables can
+    # never alias. Planner memo caches key on (perf_version, available);
+    # None (the from_table default) disables memoization — correct, just
+    # cold — so a hand-built snapshot can never hit a stale cache line.
+    perf_version: Optional[Tuple[int, int]] = None
 
     def __post_init__(self):
         assert self.perf.shape == (len(self.accuracies), len(self.names))
@@ -80,15 +87,36 @@ class ClusterState:
 
     @property
     def avail_idx(self) -> np.ndarray:
-        """Column indices of the available (serving) nodes."""
-        return np.array([j for j, a in enumerate(self.available) if a],
-                        dtype=int)
+        """Column indices of the available (serving) nodes. Computed once
+        per snapshot (cached on the instance; SnapshotCache pre-seeds it
+        so steady-state events share one array across snapshots)."""
+        idx = self.__dict__.get("_avail_idx")
+        if idx is None:
+            idx = np.array([j for j, a in enumerate(self.available) if a],
+                           dtype=int)
+            idx.flags.writeable = False
+            object.__setattr__(self, "_avail_idx", idx)
+        return idx
 
     @property
     def available_perf(self) -> np.ndarray:
         """Pruned profiling view: perf columns of available nodes only
         (the paper's lines 3-5 prune of disconnected boards)."""
-        return self.perf[:, self.avail_idx]
+        pruned = self.__dict__.get("_avail_perf")
+        if pruned is None:
+            pruned = self.perf[:, self.avail_idx]
+            object.__setattr__(self, "_avail_perf", pruned)
+        return pruned
+
+    @property
+    def plan_key(self) -> Optional[Tuple[object, Tuple[bool, ...]]]:
+        """Memo-key prefix for planner caches: everything a plan reads
+        besides the request — the profiling view identity (table version)
+        and the serving mask. None when the snapshot has no version
+        (hand-built), which disables memoization."""
+        if self.perf_version is None:
+            return None
+        return (self.perf_version, self.available)
 
     def capacity(self, level: int = -1) -> float:
         """Cluster items/s over available nodes at ``level`` (default:
@@ -115,3 +143,72 @@ class ClusterState:
         if not active:
             return float("inf")
         return sum(self.backlog_of(n) for n in active) / len(active)
+
+
+class SnapshotCache:
+    """Incremental ClusterState builder: copy-on-write instead of
+    copy-per-event.
+
+    ``ClusterState.from_table`` copies the whole perf matrix on every
+    snapshot; at one snapshot per simulator event that copy (plus the
+    name/availability rebuilds) dominates the control-plane hot path.
+    This cache shares one frozen perf/accuracies copy across snapshots
+    and re-copies only when ``ProfilingTable.version`` says the table
+    actually mutated (membership, re-profile, straggler EWMA) — the
+    copy-on-write discipline: a taken snapshot is still immutable and
+    can never see a later table mutation, because mutations bump the
+    version and the next snapshot gets a fresh frozen copy.
+
+    Invalidation rules (see repro/sched/README.md §Performance):
+      * perf / accuracies / names — refreshed when ``table.version``
+        changes (every ProfilingTable mutation bumps it);
+      * availability / avail_idx — recomputed when the serving mask
+        changes (an O(nodes) tuple compare per snapshot);
+      * backlogs / now / standby — per-snapshot values, always fresh.
+    """
+
+    _ids = itertools.count()
+
+    def __init__(self):
+        self._cache_id = next(SnapshotCache._ids)
+        self._table: Optional[ProfilingTable] = None
+        self._version: Optional[int] = None
+        self._epoch = -1                # bumped on every refresh: the
+        #                                 memo token, so a table swap can
+        #                                 never reuse the old table's key
+        self._perf: Optional[np.ndarray] = None
+        self._acc: Optional[np.ndarray] = None
+        self._names: Tuple[str, ...] = ()
+        self._avail: Optional[Tuple[bool, ...]] = None
+        self._avail_idx: Optional[np.ndarray] = None
+
+    def snapshot(self, table: ProfilingTable, *, now: float = 0.0,
+                 backlogs: Optional[Mapping[str, float]] = None,
+                 standby: Tuple[str, ...] = ()) -> "ClusterState":
+        """Snapshot like ``ClusterState.from_table`` but O(nodes) in the
+        steady state (no table mutation between events)."""
+        if (self._table is not table or self._version != table.version):
+            # table identity is part of the key: one cache pointed at a
+            # *different* table (even at an equal version) must refresh,
+            # or its snapshots and their memo tokens would alias
+            self._perf = _frozen_array(table.perf)
+            self._acc = _frozen_array(table.accuracies)
+            self._names = tuple(n.name for n in table.nodes)
+            self._table = table
+            self._version = table.version
+            self._epoch += 1
+            self._avail = None          # node set may have changed shape
+        avail = tuple(bool(n.available) for n in table.nodes)
+        if avail != self._avail:
+            idx = np.array([j for j, a in enumerate(avail) if a], dtype=int)
+            idx.flags.writeable = False
+            self._avail = avail
+            self._avail_idx = idx
+        state = ClusterState(
+            now_s=now, names=self._names, available=self._avail,
+            perf=self._perf, accuracies=self._acc,
+            backlog_s=types.MappingProxyType(dict(backlogs or {})),
+            standby=frozenset(standby),
+            perf_version=(self._cache_id, self._epoch))
+        object.__setattr__(state, "_avail_idx", self._avail_idx)
+        return state

@@ -15,13 +15,16 @@ from repro.sim.arrivals import (ArrivalProcess, BurstArrivals,
                                 DiurnalArrivals, PoissonArrivals,
                                 RequestSampler, TraceArrivals)
 from repro.sim.events import EventQueue, SimClock, SimEvent
-from repro.sim.scenarios import SCENARIOS, Scenario, build_scenario
+from repro.sim.scenarios import (FLEET_HORIZONS, FLEET_SCENARIOS,
+                                 FLEET_SIZES, SCENARIOS, Scenario,
+                                 build_scenario)
 from repro.sim.simulator import (OnlineSimulator, RequestRecord, SimReport,
                                  TimedFault)
 
 __all__ = [
     "ArrivalProcess", "BurstArrivals", "DiurnalArrivals", "PoissonArrivals",
     "RequestSampler", "TraceArrivals", "EventQueue", "SimClock", "SimEvent",
-    "SCENARIOS", "Scenario", "build_scenario", "OnlineSimulator",
+    "SCENARIOS", "FLEET_SCENARIOS", "FLEET_SIZES", "FLEET_HORIZONS",
+    "Scenario", "build_scenario", "OnlineSimulator",
     "RequestRecord", "SimReport", "TimedFault",
 ]

@@ -11,9 +11,20 @@ cluster actually being simulated. Builders:
                           reconnect (paper Fig. 9, online)
   * ``straggler-storm`` — steady load + rolling DVFS slowdowns that later
                           clear (paper's throttling experiment, online)
+  * ``fleet-64`` / ``fleet-256`` — large-fleet control-plane stressors:
+                          steady load plus a churn wave over a synthetic
+                          heterogeneous fleet (``FLEET_SCENARIOS``; build
+                          the matching table with
+                          ``core.cluster.synthetic_fleet``). Kept out of
+                          ``SCENARIOS`` so ``--scenario all`` sweeps stay
+                          the classic grid — every request fans a share to
+                          every node, so fleet event counts scale ~linearly
+                          with fleet size and want short horizons
+                          (``FLEET_HORIZONS``).
 
-Use :func:`build_scenario` / ``SCENARIOS`` for name-based lookup
-(benchmarks/run_sim.py) or call the builders directly with custom knobs.
+Use :func:`build_scenario` for name-based lookup (benchmarks/run_sim.py)
+— it resolves classic and fleet names — or call the builders directly
+with custom knobs.
 """
 from __future__ import annotations
 
@@ -185,6 +196,49 @@ def trace(table: ProfilingTable, arrivals: Sequence[Arrival],
                     arrivals=arr, faults=list(faults), horizon_s=horizon)
 
 
+def fleet(table: ProfilingTable, *, seed: int = 0, horizon_s: float = 6.0,
+          load: float = 0.7, churn_frac: float = 0.05,
+          sampler: Optional[RequestSampler] = None,
+          name: str = "fleet") -> Scenario:
+    """Large-fleet control-plane stressor: steady Poisson at ``load`` x
+    capacity over a many-node heterogeneous fleet, plus a churn wave —
+    the weakest ``churn_frac`` of the fleet drops at 1/3 horizon and
+    rejoins at 2/3 — so snapshot/plan caches see availability churn, not
+    just steady state. Built for ``synthetic_fleet`` tables but works on
+    any; pair with short horizons (every request fans a share onto every
+    available node, so events ~= arrivals x fleet size)."""
+    sampler = sampler or RequestSampler(table)
+    rate = _rate_for_load(table, sampler, load)
+    active = [(j, n.name) for j, n in enumerate(table.nodes) if n.available]
+    # churn the weakest level-0 columns: losing them stresses replanning
+    # without collapsing capacity
+    victims = sorted(active, key=lambda jn: table.perf[0, jn[0]])
+    victims = [nm for _, nm in victims[:max(1, int(len(active)
+                                                  * churn_frac))]]
+    faults: List[TimedFault] = []
+    for nm in victims:
+        faults.append(TimedFault(time=horizon_s / 3, kind="disconnect",
+                                 node=nm))
+        faults.append(TimedFault(time=2 * horizon_s / 3, kind="reconnect",
+                                 node=nm))
+    return Scenario(
+        name=name,
+        description=f"{len(active)}-node fleet at {load:.0%} load "
+                    f"({rate:.1f} req/s), {len(victims)} node(s) churning",
+        arrivals=PoissonArrivals(rate, horizon_s, sampler, seed).generate(),
+        faults=faults, horizon_s=horizon_s)
+
+
+def fleet_64(table: ProfilingTable, *, seed: int = 0, **kwargs) -> Scenario:
+    kwargs.setdefault("horizon_s", FLEET_HORIZONS["fleet-64"])
+    return fleet(table, seed=seed, name="fleet-64", **kwargs)
+
+
+def fleet_256(table: ProfilingTable, *, seed: int = 0, **kwargs) -> Scenario:
+    kwargs.setdefault("horizon_s", FLEET_HORIZONS["fleet-256"])
+    return fleet(table, seed=seed, name="fleet-256", **kwargs)
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "steady": steady,
     "diurnal": diurnal,
@@ -194,10 +248,21 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "flash-crowd": flash_crowd,
 }
 
+# fleet scenarios resolve through build_scenario but stay out of the
+# ``all`` sweep: their event counts scale with fleet size
+FLEET_SIZES: Dict[str, int] = {"fleet-64": 64, "fleet-256": 256}
+FLEET_HORIZONS: Dict[str, float] = {"fleet-64": 6.0, "fleet-256": 2.0}
+FLEET_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "fleet-64": fleet_64,
+    "fleet-256": fleet_256,
+}
+
 
 def build_scenario(name: str, table: ProfilingTable, *, seed: int = 0,
                    **kwargs) -> Scenario:
-    if name not in SCENARIOS:
+    builder = SCENARIOS.get(name) or FLEET_SCENARIOS.get(name)
+    if builder is None:
         raise KeyError(
-            f"unknown scenario {name!r}; have {sorted(SCENARIOS)}")
-    return SCENARIOS[name](table, seed=seed, **kwargs)
+            f"unknown scenario {name!r}; have "
+            f"{sorted(SCENARIOS) + sorted(FLEET_SCENARIOS)}")
+    return builder(table, seed=seed, **kwargs)

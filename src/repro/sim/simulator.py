@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.control.admission import (ADMIT, DEGRADE, REJECT,
@@ -60,6 +61,7 @@ class _Share:
     start_s: float = -1.0
     finish_s: float = -1.0
     service_s: float = 0.0
+    predicted_s: float = 0.0  # cached predictor value (backlog accounting)
 
 
 class _NodeQueue:
@@ -67,7 +69,11 @@ class _NodeQueue:
 
     Beyond executing, the queue is a *sensor*: it reports depth, backlog
     seconds, and oldest-share age — the signals the admission controller
-    and autoscaler feed on.
+    and autoscaler feed on. The backlog sum is maintained incrementally
+    (O(1) per enqueue/dequeue instead of O(queued shares) per read) and
+    revalidated lazily when the predictor's inputs change — the
+    ``version`` arguments below carry ``SimBackend.pred_version``, which
+    bumps on every table mutation or straggler derate.
     """
 
     def __init__(self, name: str):
@@ -75,9 +81,42 @@ class _NodeQueue:
         self.up = True
         self.running: Optional[_Share] = None
         self.queue: Deque[_Share] = collections.deque()
+        self._queued_pred_s = 0.0
+        self._pred_version: object = None
+
+    def _revalidate(self, predictor: Callable[[Assignment], float],
+                    version: object):
+        """Re-predict every queued share when the profiling view or the
+        straggler derates changed since the cached sum was built."""
+        if version != self._pred_version:
+            total = 0.0
+            for s in self.queue:
+                s.predicted_s = predictor(s.assignment)
+                total += s.predicted_s
+            self._queued_pred_s = total
+            self._pred_version = version
+
+    def enqueue(self, share: _Share,
+                predictor: Callable[[Assignment], float], version: object):
+        self._revalidate(predictor, version)
+        share.predicted_s = predictor(share.assignment)
+        self.queue.append(share)
+        self._queued_pred_s += share.predicted_s
+
+    def pop_next(self) -> _Share:
+        share = self.queue.popleft()
+        self._queued_pred_s -= share.predicted_s
+        if not self.queue:
+            self._queued_pred_s = 0.0   # pin float drift at the idle point
+        return share
 
     def drop_rid(self, rid: int):
         self.queue = collections.deque(s for s in self.queue if s.rid != rid)
+        self._queued_pred_s = sum(s.predicted_s for s in self.queue)
+
+    def clear_queue(self):
+        self.queue.clear()
+        self._queued_pred_s = 0.0
 
     # ---- control-loop signals ---------------------------------------
     def depth(self) -> int:
@@ -85,11 +124,24 @@ class _NodeQueue:
         return len(self.queue) + (1 if self.running is not None else 0)
 
     def backlog_s(self, now: float,
-                  predictor: Callable[[Assignment], float]) -> float:
+                  predictor: Callable[[Assignment], float],
+                  version: object) -> float:
         """Predicted seconds of work ahead of a share enqueued now: the
         running share's remaining time plus every queued share's predicted
         service time (noise-free, so reading the signal is side-effect
-        free)."""
+        free). O(1) in the steady state via the incremental sum."""
+        self._revalidate(predictor, version)
+        total = 0.0
+        if self.running is not None:
+            total += max(0.0, self.running.finish_s - now)
+        return total + self._queued_pred_s
+
+    def backlog_s_recompute(self, now: float,
+                            predictor: Callable[[Assignment], float]
+                            ) -> float:
+        """Pre-PR backlog read: walk the queue calling the predictor per
+        share. Retained as the baseline ``bench_sched.py`` measures the
+        incremental sensor against (``legacy_control_plane=True``)."""
         total = 0.0
         if self.running is not None:
             total += max(0.0, self.running.finish_s - now)
@@ -156,6 +208,8 @@ class SimReport:
     scaling: List[ScalingAction] = dataclasses.field(default_factory=list)
     admission_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
     end_s: float = 0.0                # sim clock when the last event fired
+    n_events: int = 0                 # events the loop processed
+    wall_s: float = 0.0               # host wall-clock of run()
 
     def summary(self) -> Dict[str, float]:
         """Aggregate metrics. Latency / deadline metrics cover *admitted*
@@ -209,11 +263,17 @@ class OnlineSimulator:
                  faults: Sequence[TimedFault] = (),
                  scenario: str = "custom", horizon_s: float = 0.0,
                  admission: Optional[AdmissionController] = None,
-                 autoscaler: Optional[Autoscaler] = None):
+                 autoscaler: Optional[Autoscaler] = None,
+                 legacy_control_plane: bool = False):
         self.gn = gn
         self.backend = gn.backend
         self.admission = admission
         self.autoscaler = autoscaler
+        # True routes snapshots through ClusterState.from_table (full copy
+        # per event) and backlog reads through the per-share recompute —
+        # the pre-PR control plane, kept so bench_sched.py can measure
+        # the incremental path against it on identical traffic
+        self.legacy_control_plane = legacy_control_plane
         if admission is not None and admission.policy is None:
             # gate and dispatch must plan identically: the admission
             # controller adopts the GN's own policy object unless the
@@ -252,6 +312,7 @@ class OnlineSimulator:
     def run(self) -> SimReport:
         if not self.gn._profiled:
             self.gn.startup()
+        t0 = time.perf_counter()
         n_events = 0
         while self.events:
             ev = self.events.pop()
@@ -269,7 +330,9 @@ class OnlineSimulator:
                                   if self.autoscaler else []),
                          admission_counts=(dict(self.admission.counts)
                                            if self.admission else {}),
-                         end_s=self.clock.now)
+                         end_s=self.clock.now,
+                         n_events=n_events,
+                         wall_s=time.perf_counter() - t0)
 
     def _handle(self, ev: SimEvent):
         now = self.clock.now
@@ -304,8 +367,14 @@ class OnlineSimulator:
 
     # ---- closed-loop control ----------------------------------------
     def _backlogs(self, now: float) -> Dict[str, float]:
-        """Per-node backlog seconds from the queue sensors."""
-        return {name: nq.backlog_s(now, self.backend.predicted_time)
+        """Per-node backlog seconds from the queue sensors — incremental
+        O(nodes) reads unless the legacy control plane was requested."""
+        pred = self.backend.predicted_time
+        if self.legacy_control_plane:
+            return {name: nq.backlog_s_recompute(now, pred)
+                    for name, nq in self.nodes.items()}
+        version = self.backend.pred_version
+        return {name: nq.backlog_s(now, pred, version)
                 for name, nq in self.nodes.items()}
 
     def _snapshot(self, now: float) -> ClusterState:
@@ -317,6 +386,10 @@ class OnlineSimulator:
         standby: Tuple[str, ...] = ()
         if self.autoscaler is not None:
             standby = tuple(self.autoscaler.standby) + self.autoscaler.pending
+        if self.legacy_control_plane:
+            return ClusterState.from_table(self.gn.table, now=now,
+                                           backlogs=backlogs,
+                                           standby=standby)
         return self.gn.snapshot(now=now, backlogs=backlogs,
                                 standby=standby)
 
@@ -434,6 +507,8 @@ class OnlineSimulator:
         rec.per_node_time = {}
         rec.queue_wait_s = 0.0
         rec.pending_shares = sum(1 for a in d.assignments if a.items > 0)
+        pred = self.backend.predicted_time
+        version = self.backend.pred_version
         for a in d.assignments:
             if a.items == 0:
                 continue
@@ -441,13 +516,13 @@ class OnlineSimulator:
             share = _Share(share_id=self._share_seq, rid=rec.request.rid,
                            epoch=rec.epoch, assignment=a, enqueue_s=now)
             nq = self.nodes[a.node]
-            nq.queue.append(share)
+            nq.enqueue(share, pred, version)
             self._maybe_start(nq)
 
     def _maybe_start(self, nq: _NodeQueue):
         if not nq.up or nq.running is not None or not nq.queue:
             return
-        share = nq.queue.popleft()
+        share = nq.pop_next()
         share.start_s = self.clock.now
         share.service_s = self.backend.assignment_time(share.assignment)
         share.finish_s = share.start_s + share.service_s
@@ -525,7 +600,7 @@ class OnlineSimulator:
         for s in nq.queue:
             if _current(s) and s.rid not in affected:
                 affected.append(s.rid)
-        nq.queue.clear()
+        nq.clear_queue()
         self._log(f"disconnect node={node} "
                   f"({len(affected)} in-flight request(s) affected)")
         # Fig. 4 right edge: re-enter DISTRIBUTE over the survivors for

@@ -7,17 +7,20 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.distributed import sharding as shd
+from repro.launch.mesh import make_abstract_mesh
 
 
 @pytest.fixture(scope="module")
 def mesh():
     # AbstractMesh: lets us unit-test 16x16 rules on a 1-CPU box
-    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    # (constructed through the version-portable helper — the ctor
+    # signature changed between jax 0.4.x and 0.5)
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 @pytest.fixture(scope="module")
 def mesh3(request):
-    return jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_divisibility_fallback(mesh):
