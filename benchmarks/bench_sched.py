@@ -223,6 +223,31 @@ def bench_e2e(horizon_s: float, seed: int) -> dict:
                 (legacy - gen) / max(fast - gen, 1e-9), 2)}
 
 
+def bench_batching(seed: int, horizon_s: float = 5.0) -> dict:
+    """Continuous-batching A/B on the overload scenario in the
+    memory-bound short-sequence regime (the BENCH_5 cell the acceptance
+    gate watches): goodput with the batch-aware runtime at max_batch=32
+    vs the sequential model, proportional policy behind the admission
+    gate, plus the batched plan-prediction error."""
+    import run_sim                  # sibling module: benchmarks/run_sim.py
+    rows = {}
+    for max_batch in (1, 32):
+        rows[max_batch] = run_sim.run_one(
+            "overload", "proportional", "admission", seed=seed,
+            horizon_s=horizon_s, noise_std=0.0, num_standby=0,
+            admission_rate=0.0, verbose=False, max_batch=max_batch,
+            seq_len=run_sim.BATCH_AB_SEQ_LEN)
+    off, on = rows[1], rows[32]
+    return {"scenario": "overload/proportional/admission",
+            "seq_len": run_sim.BATCH_AB_SEQ_LEN,
+            "max_batch": 32,
+            "goodput_off": round(off["goodput_rps"], 2),
+            "goodput_on": round(on["goodput_rps"], 2),
+            "goodput_ratio": round(on["goodput_rps"]
+                                   / max(off["goodput_rps"], 1e-9), 3),
+            "plan_err_on": round(on["plan_makespan_err"], 5)}
+
+
 def check_regression(result: dict, anchor_path: str,
                      tolerance: float) -> int:
     """Exit status 1 when plans/sec or events/sec regressed > tolerance
@@ -256,6 +281,24 @@ def check_regression(result: dict, anchor_path: str,
             f"(absolute: {result['events_per_sec']['fast']:.0f} vs "
             f"anchor {anchor.get('events_per_sec', {}).get('fast', 0):.0f}"
             " events/s)")
+    # batching-on cells: the goodput ratio is seed-deterministic and
+    # machine-independent (sim-clock metric), so it is compared directly
+    base_ab = anchor.get("batching", {}).get("goodput_ratio")
+    fresh_ab = result.get("batching", {}).get("goodput_ratio")
+    # `is not None`, not truthiness: a fresh ratio of 0.0 (nothing
+    # completed under batching) is the worst regression, not a skip
+    if base_ab and fresh_ab is not None \
+            and fresh_ab < base_ab * (1.0 - tolerance):
+        failures.append(
+            f"batching goodput ratio: {fresh_ab:.2f}x < "
+            f"{(1 - tolerance):.0%} of anchor {base_ab:.2f}x")
+    base_err = anchor.get("batching", {}).get("plan_err_on")
+    fresh_err = result.get("batching", {}).get("plan_err_on")
+    if fresh_err is not None and fresh_err > max(
+            0.05, (base_err or 0.0) * (1.0 + tolerance)):
+        failures.append(
+            f"batched plan-prediction error {fresh_err:.4f} above the "
+            "5% acceptance bound")
     if failures:
         print("control-plane perf REGRESSION vs "
               f"{os.path.basename(anchor_path)}:", file=sys.stderr)
@@ -308,6 +351,13 @@ def main(argv=None) -> int:
     e = result["events_per_sec"]
     print(f"  {e['events']} events: {e['fast']:.0f}/s fast vs "
           f"{e['legacy']:.0f}/s legacy ({e['speedup']:.2f}x)")
+
+    print("# continuous-batching A/B (overload, short-seq regime)")
+    result["batching"] = bench_batching(args.seed)
+    ab = result["batching"]
+    print(f"  goodput {ab['goodput_off']:.1f} -> {ab['goodput_on']:.1f} "
+          f"req/s ({ab['goodput_ratio']:.2f}x at max_batch="
+          f"{ab['max_batch']}; plan err {ab['plan_err_on']:.4f})")
 
     if not args.skip_e2e:
         print("# end-to-end classic sweep wall-clock")

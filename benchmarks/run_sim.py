@@ -9,6 +9,12 @@ Run:
   PYTHONPATH=src python benchmarks/run_sim.py --scenario overload
   PYTHONPATH=src python benchmarks/run_sim.py --scenario all --verbose \
       --json sim_metrics.json
+  # continuous-batching A/B in the memory-bound short-seq regime
+  PYTHONPATH=src python benchmarks/run_sim.py --scenario overload \
+      --max-batch 1,32 --seq-len 8 --batch-bench-json
+  # replay a real serving log (CSV/JSONL)
+  PYTHONPATH=src python benchmarks/run_sim.py \
+      --scenario trace:serving_log.csv --max-batch 32
 
 Output: one CSV-ish row per (scenario, policy, control) with p50/p99
 latency, the deadline-violation rate *for admitted requests*, goodput
@@ -40,6 +46,16 @@ explicit opt-in rather than piggybacking on every ``--json``. The
 control-plane microbenchmark trajectory (plans/sec, events/sec vs the
 retained pre-PR implementation) lives next door in ``bench_sched.py``
 -> ``BENCH_4.json``.
+
+Continuous batching: ``--max-batch`` sweeps engine-batch caps (1 =
+batching off, the pre-batching execution model — its CSV stays
+byte-identical to the pre-batching tool); ``--seq-len`` picks the
+serving item size (short items are the memory-bound regime where
+batching pays) and ``--formation-window`` the partial-batch hold
+window. ``--batch-bench-json`` writes the batching A/B trajectory
+(``BENCH_5.json``: goodput/p99/shed/plan-error per cell plus on/off
+goodput ratios). ``--scenario trace:<path>`` replays a CSV/JSONL
+serving log instead of a synthetic arrival process.
 """
 from __future__ import annotations
 
@@ -66,11 +82,24 @@ from repro.sched import registered_policies
 from repro.sched.policy import REFERENCE_PREFIX
 from repro.sim import (FLEET_HORIZONS, FLEET_SCENARIOS, FLEET_SIZES,
                        SCENARIOS, OnlineSimulator, build_scenario)
+from repro.sim.scenarios import TRACE_PREFIX
 
 ARCH = "phi4-mini-3.8b"
 CONTROL_MODES = ("none", "admission", "autoscale", "full")
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_COMPACT = os.path.join(REPO_ROOT, "BENCH_3.json")
+BENCH_BATCH = os.path.join(REPO_ROOT, "BENCH_5.json")
+# the classic sweep stays the paper's five policies so the committed
+# BENCH_3.json cells and the nightly CSV keep their shape; new registry
+# entries (accuracy_edf, ...) run when named via --policies
+SWEEP_POLICIES = ("uniform", "uniform_apx", "asymmetric", "proportional",
+                  "exact_oracle")
+# the batching A/B runs in the short-sequence serving regime (the
+# paper's small-item edge workload): per-item compute is tiny there, so
+# weight streaming dominates and the engine batch is the lever. At the
+# classic seq_len=512 prefill is compute-bound at every batch size and
+# batching is (correctly) a no-op
+BATCH_AB_SEQ_LEN = 8
 
 
 def _fresh_table(scenario_name: str, num_standby: int, seed: int,
@@ -92,13 +121,15 @@ def _fresh_table(scenario_name: str, num_standby: int, seed: int,
 
 def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
             horizon_s: float, noise_std: float, num_standby: int,
-            admission_rate: float, verbose: bool) -> dict:
+            admission_rate: float, verbose: bool, max_batch: int = 1,
+            seq_len: int = 512, formation_window_s: float = 0.0) -> dict:
     t_wall = time.perf_counter()
-    table = _fresh_table(scenario_name, num_standby, seed)
+    table = _fresh_table(scenario_name, num_standby, seed, seq_len=seq_len)
     sc = build_scenario(scenario_name, table, seed=seed,
                         horizon_s=horizon_s)
     gn = GatewayNode(table, SimBackend(table, noise_std=noise_std,
-                                       seed=seed), policy=policy)
+                                       seed=seed), policy=policy,
+                     max_batch=max_batch)
     admission = None
     if control in ("admission", "full"):
         admission = AdmissionController(
@@ -109,7 +140,8 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
         autoscaler = Autoscaler(table, standby_names)
     sim = OnlineSimulator(gn, sc.arrivals, sc.faults,
                           scenario=sc.name, horizon_s=sc.horizon_s,
-                          admission=admission, autoscaler=autoscaler)
+                          admission=admission, autoscaler=autoscaler,
+                          formation_window_s=formation_window_s)
     report = sim.run()
     summary = report.summary()
     fallbacks = summary.get("plan_fallbacks", 0.0)
@@ -127,7 +159,7 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
                     "scale-up", "scale-down", "node_up")):
                 print(f"    [{policy}/{control}] {line}", file=sys.stderr)
     row = {"scenario": sc.name, "policy": policy, "control": control,
-           "seed": seed}
+           "seed": seed, "max_batch": max_batch, "seq_len": seq_len}
     row.update({k: float(v) for k, v in summary.items()})
     row["admission_counts"] = dict(report.admission_counts)
     row["scaling_actions"] = [
@@ -152,9 +184,31 @@ def main(argv=None) -> int:
                          "named explicitly — their event counts scale "
                          "with fleet size)")
     policy_names = registered_policies()
-    ap.add_argument("--policies", default=",".join(policy_names),
+    ap.add_argument("--policies", default=",".join(SWEEP_POLICIES),
                     help="comma-separated subset of "
-                         f"{sorted(policy_names)}")
+                         f"{sorted(policy_names)} (default: the classic "
+                         "five-policy sweep — newer registry entries run "
+                         "when named)")
+    ap.add_argument("--max-batch", default="1",
+                    help="comma-separated engine-batch caps to sweep "
+                         "(default 1 = continuous batching off, the "
+                         "pre-batching execution model; e.g. '1,32' is "
+                         "the batching A/B)")
+    ap.add_argument("--seq-len", type=int, default=512,
+                    help="profiling-table sequence length (the serving "
+                         "item size). Short items (<=32) are the "
+                         "memory-bound regime where batching pays; the "
+                         f"A/B artifact uses {BATCH_AB_SEQ_LEN}")
+    ap.add_argument("--formation-window", type=float, default=0.0,
+                    help="continuous-batching partial-batch hold window "
+                         "in sim-seconds (0 = launch as soon as the "
+                         "server frees)")
+    ap.add_argument("--batch-bench-json", nargs="?", const=BENCH_BATCH,
+                    default="",
+                    help="write the compact batching A/B trajectory "
+                         "(goodput/p99/shed/plan-error per cell x "
+                         "max_batch, plus on/off goodput ratios; default "
+                         "path: BENCH_5.json at the repo root)")
     ap.add_argument("--control", default="none,full",
                     help="comma-separated subset of "
                          f"{CONTROL_MODES} to sweep")
@@ -190,9 +244,15 @@ def main(argv=None) -> int:
     scenario_names = (sorted(SCENARIOS) if args.scenario == "all"
                       else [args.scenario])
     for s in scenario_names:
-        if s not in SCENARIOS and s not in FLEET_SCENARIOS:
+        if s.startswith(TRACE_PREFIX):
+            trace_path = s[len(TRACE_PREFIX):]
+            if not os.path.exists(trace_path):
+                ap.error(f"trace file not found: {trace_path!r}")
+        elif s not in SCENARIOS and s not in FLEET_SCENARIOS:
             ap.error(f"unknown scenario {s!r}; have {sorted(SCENARIOS)}, "
-                     f"{sorted(FLEET_SCENARIOS)}, or 'all'")
+                     f"{sorted(FLEET_SCENARIOS)}, "
+                     f"'{TRACE_PREFIX}<path>' (serving-log replay), "
+                     "or 'all'")
     policies = [p.strip() for p in args.policies.split(",") if p.strip()]
     if not policies:
         ap.error("--policies must name at least one policy "
@@ -212,6 +272,16 @@ def main(argv=None) -> int:
             ap.error(f"unknown control mode {c!r}; have {CONTROL_MODES}")
     if args.horizon is not None and args.horizon <= 0:
         ap.error("--horizon must be > 0 sim-seconds")
+    try:
+        batches = [int(b) for b in args.max_batch.split(",") if b.strip()]
+    except ValueError:
+        batches = []
+    if not batches or any(b < 1 for b in batches):
+        ap.error("--max-batch must be a comma-separated list of ints >= 1")
+    if args.seq_len < 1:
+        ap.error("--seq-len must be >= 1")
+    if args.formation_window < 0:
+        ap.error("--formation-window must be >= 0")
     fleet_only = all(s in FLEET_SCENARIOS for s in scenario_names)
     if args.standby < 0:
         ap.error("--standby must be >= 0")
@@ -232,42 +302,119 @@ def main(argv=None) -> int:
             "p99_latency_s", "deadline_violation_rate", "goodput_rps",
             "mean_acc", "scale_ups", "mean_scale_up_latency_s",
             "redistributes")
+    # a bare batch-1 sweep keeps the exact pre-batching CSV shape (the
+    # nightly diff anchor); a --max-batch sweep appends the batch column
+    batch_sweep = batches != [1]
+    if batch_sweep:
+        cols = cols + ("max_batch",)
     print(",".join(cols))
     rows = []
     for sname in scenario_names:
         horizon = args.horizon
         if horizon is None:
-            horizon = FLEET_HORIZONS.get(sname, 30.0)
+            # trace replay derives its horizon from the last logged
+            # arrival unless one is forced explicitly
+            horizon = (0.0 if sname.startswith(TRACE_PREFIX)
+                       else FLEET_HORIZONS.get(sname, 30.0))
         for policy in policies:
             for control in controls:
-                row = run_one(sname, policy, control, seed=args.seed,
-                              horizon_s=horizon,
-                              noise_std=args.noise,
-                              num_standby=args.standby,
-                              admission_rate=args.admission_rate,
-                              verbose=args.verbose)
-                rows.append(row)
-                print(",".join([
-                    row["scenario"], row["policy"], row["control"],
-                    f"{row['offered']:.0f}", f"{row['admitted']:.0f}",
-                    f"{row['completed']:.0f}", f"{row['shed_rate']:.3f}",
-                    f"{row['degraded']:.0f}",
-                    f"{row['p50_latency_s']:.4f}",
-                    f"{row['p99_latency_s']:.4f}",
-                    f"{row['deadline_violation_rate']:.3f}",
-                    f"{row['goodput_rps']:.2f}",
-                    f"{row['mean_acc']:.2f}",
-                    f"{row['scale_ups']:.0f}",
-                    f"{row['mean_scale_up_latency_s']:.2f}",
-                    f"{row['redistributes']:.0f}",
-                ]))
+                for max_batch in batches:
+                    row = run_one(sname, policy, control, seed=args.seed,
+                                  horizon_s=horizon,
+                                  noise_std=args.noise,
+                                  num_standby=args.standby,
+                                  admission_rate=args.admission_rate,
+                                  verbose=args.verbose,
+                                  max_batch=max_batch,
+                                  seq_len=args.seq_len,
+                                  formation_window_s=args.formation_window)
+                    rows.append(row)
+                    out = [
+                        row["scenario"], row["policy"], row["control"],
+                        f"{row['offered']:.0f}", f"{row['admitted']:.0f}",
+                        f"{row['completed']:.0f}",
+                        f"{row['shed_rate']:.3f}",
+                        f"{row['degraded']:.0f}",
+                        f"{row['p50_latency_s']:.4f}",
+                        f"{row['p99_latency_s']:.4f}",
+                        f"{row['deadline_violation_rate']:.3f}",
+                        f"{row['goodput_rps']:.2f}",
+                        f"{row['mean_acc']:.2f}",
+                        f"{row['scale_ups']:.0f}",
+                        f"{row['mean_scale_up_latency_s']:.2f}",
+                        f"{row['redistributes']:.0f}",
+                    ]
+                    if batch_sweep:
+                        out.append(f"{row['max_batch']:d}")
+                    print(",".join(out))
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2, sort_keys=True)
         print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     if args.bench_json:
+        if batch_sweep:
+            ap.error("--bench-json is the batching-off perf anchor "
+                     "(BENCH_3); a --max-batch sweep writes the A/B "
+                     "artifact via --batch-bench-json instead")
         write_bench_compact(rows, args, path=args.bench_json)
+    if args.batch_bench_json:
+        if not batch_sweep or 1 not in batches:
+            # never let a partial run clobber the committed A/B anchor
+            # with cells that cannot carry an on/off ratio
+            ap.error("--batch-bench-json needs a --max-batch sweep that "
+                     "includes 1 and a cap above it (e.g. "
+                     "--max-batch 1,32), or the A/B ratios would be "
+                     "empty")
+        write_batch_bench(rows, args, batches, path=args.batch_bench_json)
     return 0
+
+
+def write_batch_bench(rows, args, batches, path: str = BENCH_BATCH):
+    """Compact batching A/B artifact (``BENCH_5.json``): one
+    goodput/p99/shed/plan-error cell per scenario x policy x control x
+    max_batch, plus an ``ab`` section with the batching-on/off goodput
+    ratio per cell (on = the largest swept cap, off = max_batch 1). The
+    committed copy is refreshed by the nightly ``--max-batch 1,32
+    --seq-len 8`` overload sweep; ``bench_sched.py --check`` gates the
+    batching cells (goodput ratio + plan-error bound) via the
+    ``batching`` section it measures into BENCH_4."""
+    cells = {
+        (f"{r['scenario']}/{r['policy']}/{r['control']}"
+         f"/b{r['max_batch']}"): {
+            "goodput_rps": round(r["goodput_rps"], 3),
+            "p99_latency_s": round(r["p99_latency_s"], 5),
+            "shed_rate": round(r["shed_rate"], 4),
+            "plan_makespan_err": round(r["plan_makespan_err"], 5),
+        }
+        for r in rows}
+    on = max(batches)
+    ab = {}
+    if on > 1 and 1 in batches:
+        base = {(r["scenario"], r["policy"], r["control"]): r
+                for r in rows if r["max_batch"] == 1}
+        for r in rows:
+            if r["max_batch"] != on:
+                continue
+            off = base.get((r["scenario"], r["policy"], r["control"]))
+            if off is None or off["goodput_rps"] <= 0:
+                continue
+            key = f"{r['scenario']}/{r['policy']}/{r['control']}"
+            ab[key] = round(r["goodput_rps"] / off["goodput_rps"], 3)
+    out = {
+        "bench": "run_sim_batching_ab",
+        "arch": ARCH,
+        "seed": args.seed,
+        "seq_len": args.seq_len,
+        "horizon_s": args.horizon,
+        "max_batch_sweep": batches,
+        "formation_window_s": args.formation_window,
+        "cells": cells,
+        "goodput_ratio_on_vs_off": ab,
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(cells)} batching cells to {path}", file=sys.stderr)
 
 
 def write_bench_compact(rows, args, path: str = BENCH_COMPACT):

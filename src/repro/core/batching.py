@@ -1,0 +1,54 @@
+"""Continuous-batching formation policy, shared by the simulator's
+batch-aware node runtime and the serving engine's ``BatchScheduler``.
+
+The policy answers one question — *launch the forming batch now, or
+keep holding it for joiners?* — identically in both worlds:
+
+  * a **full** batch (``max_batch`` items) launches immediately;
+  * a **partial** batch launches once its oldest item has waited the
+    formation window (``window_s``); with ``window_s == 0`` partial
+    batches launch as soon as the server is free (no added latency —
+    amortization then comes purely from queue depth, which is exactly
+    when it matters);
+  * an empty queue never launches.
+
+Join-on-arrival falls out of the same rule: items that arrive while a
+batch is being held join it (up to ``max_batch``), and a join that
+fills the batch launches it at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchFormation:
+    """Formation knobs: engine-batch cap and partial-batch hold window."""
+    max_batch: int = 1
+    window_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.max_batch >= 1, "max_batch must be >= 1"
+        assert self.window_s >= 0.0, "window_s must be >= 0"
+
+    @property
+    def enabled(self) -> bool:
+        """Batching on? ``max_batch == 1`` is the sequential model."""
+        return self.max_batch > 1
+
+    def take(self, queued: int) -> int:
+        """Items the next batch takes from a queue of ``queued``."""
+        return min(queued, self.max_batch)
+
+    def ready(self, queued: int, oldest_wait_s: float) -> bool:
+        """Launch now? Full batch, or window expired on a partial one."""
+        if queued <= 0:
+            return False
+        if queued >= self.max_batch:
+            return True
+        return oldest_wait_s >= self.window_s
+
+    def hold_until(self, enqueue_s: float) -> float:
+        """Launch deadline for a partial batch whose oldest item was
+        enqueued at ``enqueue_s``."""
+        return enqueue_s + self.window_s

@@ -15,11 +15,12 @@ analogue). Two backends execute a Dispatch:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.profiling import (NodeProfile, ProfilingTable,
+                                  batched_service_s, interp_throughput)
 from repro.core.requests import Dispatch, ExecutionResult
 
 
@@ -129,6 +130,41 @@ class SimBackend:
         perf = self.table.perf[a.apx_level, j]
         perf *= self.stragglers.get(a.node, 1.0)
         return a.items / max(perf, 1e-9)
+
+    def batched_predicted_time(self, a: "Assignment", max_batch: int,
+                               items: Optional[int] = None) -> float:
+        """Deterministic service-time prediction for ``items`` (default:
+        the whole share) of one share under continuous batching at
+        ``max_batch``: full engine batches at the cap's throughput plus
+        the partial tail at its own. The batch-aware planners price
+        shares with the same decomposition, so gate predictions match
+        the runtime exactly under the noise-free backend."""
+        if max_batch <= 1:
+            t = self.predicted_time(a)
+            if items is None:
+                return t
+            return t * items / max(a.items, 1)
+        j = self._node_idx[a.node]
+        curve = self.table.perf_b[a.apx_level, j] * self.stragglers.get(
+            a.node, 1.0)
+        return batched_service_s(a.items if items is None else items,
+                                 curve, self.table.batch_grid, max_batch)
+
+    def engine_batch_time(self, node: str, level: int, n_items: int,
+                          batch_size: int) -> float:
+        """Service time of one runtime op: ``n_items`` items executed in
+        engine batches of ``batch_size`` (a full-run op coalesces
+        ``n_items / batch_size`` identical full batches; a partial/mixed
+        batch has ``n_items == batch_size``). Straggler derate and the
+        noise draw apply to the whole op, mirroring
+        :meth:`assignment_time`'s one-draw-per-share discipline."""
+        j = self._node_idx[node]
+        perf = float(interp_throughput(self.table.perf_b[level, j],
+                                       self.table.batch_grid, batch_size))
+        perf *= self.stragglers.get(node, 1.0)
+        if self.noise_std > 0:
+            perf *= max(0.05, 1.0 + self.rng.normal(0, self.noise_std))
+        return n_items / max(perf, 1e-9)
 
     def assignment_time(self, a: "Assignment") -> float:
         """Service time of one node's share (straggler + noise applied).

@@ -50,12 +50,18 @@ def exact_oracle(table: ProfilingTable, request: InferenceRequest,
                          max_enum_nodes=max_enum_nodes)
 
 
+def accuracy_edf(table: ProfilingTable,
+                 request: InferenceRequest) -> Dispatch:
+    return _plan_offline("accuracy_edf", table, request)
+
+
 POLICIES = {
     "uniform": uniform,
     "uniform_apx": uniform_apx,
     "asymmetric": asymmetric,
     "proportional": proportional,
     "exact_oracle": exact_oracle,
+    "accuracy_edf": accuracy_edf,
 }
 
 # every registered policy must stay reachable through the legacy surface

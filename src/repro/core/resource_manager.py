@@ -93,9 +93,16 @@ class GatewayNode:
     def __init__(self, table: ProfilingTable, backend: SimBackend,
                  policy: Union[str, Policy] = "proportional", *,
                  straggler_ewma: float = 0.5,
-                 snapshot_caching: bool = True):
+                 snapshot_caching: bool = True,
+                 max_batch: int = 1):
         self.table = table
         self.backend = backend
+        # engine-batch cap of the serving runtime: every snapshot this GN
+        # takes carries it, so policies and the admission gate price at
+        # the batch the node runtime will actually achieve. 1 = batching
+        # off (the pre-batching scalar model, bit-identical)
+        assert max_batch >= 1, "max_batch must be >= 1"
+        self.max_batch = max_batch
         # copy-on-write snapshots: one frozen profiling view shared across
         # snapshots until the table's version says it mutated. False
         # forces a full copy per snapshot (the pre-PR baseline the bench
@@ -177,10 +184,12 @@ class GatewayNode:
         if self._snap_cache is not None:
             return self._snap_cache.snapshot(self.table, now=now,
                                              backlogs=backlogs,
-                                             standby=tuple(standby))
+                                             standby=tuple(standby),
+                                             max_batch=self.max_batch)
         return ClusterState.from_table(self.table, now=now,
                                        backlogs=backlogs,
-                                       standby=tuple(standby))
+                                       standby=tuple(standby),
+                                       max_batch=self.max_batch)
 
     def plan(self, request: InferenceRequest, *, now: float = 0.0,
              backlogs: Optional[Mapping[str, float]] = None,
@@ -244,7 +253,18 @@ class GatewayNode:
             if observed_t is None or observed_t <= 0:
                 continue
             j = self._name_idx[a.node]
-            predicted_t = a.items / max(self.table.perf[a.apx_level, j], 1e-9)
+            if self.max_batch > 1:
+                # batch-aware prediction: comparing a batched execution
+                # against the scalar REF_BATCH prediction would read the
+                # amortization itself as a straggler signal (or mask a
+                # real one), decaying healthy nodes
+                from repro.core.profiling import batched_service_s
+                predicted_t = batched_service_s(
+                    a.items, self.table.perf_b[a.apx_level, j],
+                    self.table.batch_grid, self.max_batch)
+            else:
+                predicted_t = a.items / max(
+                    self.table.perf[a.apx_level, j], 1e-9)
             ratio = predicted_t / observed_t          # <1 means slower
             if ratio < 0.95:
                 w = self.straggler_ewma

@@ -1,0 +1,12 @@
+"""Version-portable Pallas TPU aliases.
+
+jax >= 0.5 renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams``; the kernels here must import on both (the
+same situation ``launch/mesh.py`` handles for ``AbstractMesh``).
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -41,6 +41,7 @@ from repro.core.requests import Assignment, Dispatch, InferenceRequest
 from repro.sched import reference
 from repro.sched.plan import Plan
 from repro.sched.policy import register_policy
+from repro.sched.split import quantized_batch_split
 from repro.sched.state import ClusterState
 
 
@@ -57,25 +58,42 @@ def _mk_plan(state: ClusterState, request: InferenceRequest,
              meta: Optional[Mapping[str, object]] = None) -> Plan:
     """Build a Plan from per-node levels: workload split proportional to
     the selected per-node throughput (Algorithm 1 lines 15-16), plus the
-    predicted per-node finish times / makespan the gate decides on."""
-    perfs = state.perf[levels, avail_idx]
+    predicted per-node finish times / makespan the gate decides on.
+
+    Batch-aware pricing: when the snapshot carries a batch cap above 1,
+    throughputs come from the batch curve at the cap (``eff_perf``) and
+    per-node service times use the same engine-batch decomposition the
+    node runtime realizes (``ClusterState.service_s``), so gate and
+    queues agree on the timings batching will actually achieve; the
+    assumed batch is recorded in ``Plan.meta``. With batching off this
+    is byte-for-byte the pre-batching assembly."""
+    batched = state.batched
+    perfs = (state.eff_perf if batched else state.perf)[levels, avail_idx]
     perf_sum = perfs.sum()
     if shares is None:
         shares = (perfs / perf_sum if perf_sum > 0
                   else np.ones_like(perfs) / len(perfs))
     num_items = request.num_items
-    # per-element double multiply + floor: same IEEE ops as the
-    # reference's np.floor(num_items * shares) — plain-python loops beat
-    # ufunc dispatch at these widths
-    item_l = [int(num_items * s // 1) for s in shares.tolist()]
-    # distribute the remainder to the fastest nodes; kind="stable" so
-    # equal-perf nodes receive it in index order on every platform
-    rem = num_items - sum(item_l)
-    if rem > 0:
-        order = np.argsort(-perfs, kind="stable").tolist()
-        n_avail = len(order)
-        for i in range(rem):
-            item_l[order[i % n_avail]] += 1
+    if batched:
+        # engine-batch-quantized split: multiples of max_batch per node,
+        # one greedily-placed tail chunk (see repro.sched.split) — a
+        # non-quantized split would pay a weight-streaming partial batch
+        # on every node
+        item_l = quantized_batch_split(state, avail_idx, levels, shares,
+                                       num_items)
+    else:
+        # per-element double multiply + floor: same IEEE ops as the
+        # reference's np.floor(num_items * shares) — plain-python loops
+        # beat ufunc dispatch at these widths
+        item_l = [int(num_items * s // 1) for s in shares.tolist()]
+        # distribute the remainder to the fastest nodes; kind="stable" so
+        # equal-perf nodes receive it in index order on every platform
+        rem = num_items - sum(item_l)
+        if rem > 0:
+            order = np.argsort(-perfs, kind="stable").tolist()
+            n_avail = len(order)
+            for i in range(rem):
+                item_l[order[i % n_avail]] += 1
 
     # one fused pass over plain-python values (ndarray scalar indexing per
     # node costs more than the whole loop); float results are identical to
@@ -97,10 +115,16 @@ def _mk_plan(state: ClusterState, request: InferenceRequest,
         total_acc += it * acc_l[lv]
         if it == 0:
             continue                    # empty shares are never enqueued
-        t = it / max(pf, 1e-9)
+        if batched:
+            t = state.service_s(it, lv, col)
+        else:
+            t = it / max(pf, 1e-9)
         service[node] = t
         finish[node] = now + backlog.get(node, 0.0) + t
     assignments = tuple(assignments)
+    if batched:
+        meta = dict(meta or {})
+        meta["assumed_batch"] = state.max_batch
     dispatch = Dispatch(request=request, assignments=assignments,
                         policy=policy)
     exec_makespan = max(service.values(), default=0.0)
@@ -146,7 +170,7 @@ class UniformApx:
             1.0 + self.margin + n / max(request.num_items, 1))
         # first (least-approximate) level meeting the per-node share; the
         # deepest level when none does
-        hit = state.available_perf >= per_node            # (levels, n)
+        hit = state.available_eff_perf >= per_node        # (levels, n)
         levels = np.where(hit.any(axis=0), hit.argmax(axis=0),
                           state.num_levels - 1)
         shares = np.ones(n) / n
@@ -161,7 +185,8 @@ class Asymmetric:
 
     def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
         idx = _avail(state)
-        caps = state.perf[0, idx]
+        caps = (state.eff_perf if state.batched
+                else state.perf)[0, idx]
         shares = caps / caps.sum()
         levels = np.zeros(len(idx), dtype=int)
         return _mk_plan(state, request, idx, levels, self.name, shares)
@@ -214,7 +239,7 @@ class Proportional:
             if levels is not None:
                 return _mk_plan(state, request, idx, levels, self.name)
 
-        pruned = state.available_perf                  # lines 3-5
+        pruned = state.available_eff_perf              # lines 3-5
         perf_vector = pruned.sum(axis=1)               # lines 6-7
         meets = np.flatnonzero(perf_vector >= target)  # line 8
         cutoff = int(meets[0]) if meets.size else state.num_levels - 1
@@ -322,7 +347,7 @@ class ExactOracle:
 
     def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
         idx = _avail(state)
-        pruned = state.available_perf
+        pruned = state.available_eff_perf
         acc = state.accuracies
         m, n = pruned.shape
         meta: Optional[Dict[str, object]] = None
@@ -384,6 +409,46 @@ class ExactOracle:
                 self._enum_cache.clear()
             self._enum_cache[key] = out
         return out
+
+
+# ----------------------------------------------------------------------
+@register_policy("accuracy_edf")
+@dataclasses.dataclass(frozen=True)
+class AccuracyEDF:
+    """Deadline-driven accuracy selection (ROADMAP PR 3 follow-up).
+
+    Earliest-deadline-first in the single-request planning frame: the
+    request's ``latency_budget_s`` is the deadline, and the policy walks
+    the accuracy ladder from the top (level 0, most accurate) picking
+    the FIRST uniform level whose backlog-aware, batch-aware makespan
+    still meets the budget — the highest accuracy the deadline can buy,
+    with the workload split proportional to that level's per-node
+    throughput. When even the deepest approximation misses the budget,
+    the deepest-level plan ships as best effort (``Plan.meta['edf']``
+    says which case happened; the admission gate will reject it anyway
+    if it still misses).
+
+    Unlike ``proportional`` (which targets ``perf_req``), this policy
+    prices directly against the *deadline* — the two agree when
+    ``perf_req`` implied the budget, and diverge exactly when queue
+    backlog or batching changes what the deadline can afford.
+    """
+    name: str = "accuracy_edf"
+
+    def plan(self, state: ClusterState, request: InferenceRequest) -> Plan:
+        idx = _avail(state)
+        n = len(idx)
+        plan = None
+        for m in range(state.num_levels):
+            levels = np.full(n, m, dtype=int)
+            plan = _mk_plan(state, request, idx, levels, self.name,
+                            meta={"edf": "met_budget", "edf_level": m})
+            if plan.meets_deadline:
+                return plan
+        # even the deepest ladder level misses: best-effort deepest
+        return dataclasses.replace(
+            plan, meta=types.MappingProxyType(
+                {**plan.meta, "edf": "best_effort"}))
 
 
 def _non_dominated_levels(pruned: np.ndarray) -> list:

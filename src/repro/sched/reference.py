@@ -34,6 +34,7 @@ from typing import Mapping, Optional
 
 import numpy as np
 
+from repro.core.profiling import batched_service_s
 from repro.core.requests import (Assignment, Dispatch, InferenceRequest)
 from repro.sched.plan import Plan
 from repro.sched.state import ClusterState
@@ -46,22 +47,41 @@ def _avail_ref(state: ClusterState) -> np.ndarray:
     return idx
 
 
+def _perf_ref(state: ClusterState) -> np.ndarray:
+    """Pricing matrix: the batch curve at the runtime's engine-batch cap
+    when batching is on (recomputed per call — the reference never
+    caches), the scalar REF_BATCH matrix otherwise."""
+    if not state.batched:
+        return state.perf
+    from repro.core.profiling import interp_throughput
+    return np.asarray(interp_throughput(state.perf_b, state.batch_grid,
+                                        state.max_batch))
+
+
 def _mk_plan_ref(state: ClusterState, request: InferenceRequest,
                  avail_idx: np.ndarray, levels: np.ndarray, policy: str,
                  shares: Optional[np.ndarray] = None,
                  meta: Optional[Mapping[str, object]] = None) -> Plan:
     """PR 3 plan assembly: per-element gathers + Python remainder loop."""
-    perfs = np.array([state.perf[levels[j], avail_idx[j]]
+    perf_m = _perf_ref(state)
+    perfs = np.array([perf_m[levels[j], avail_idx[j]]
                       for j in range(len(avail_idx))])
     if shares is None:
         shares = (perfs / perfs.sum() if perfs.sum() > 0
                   else np.ones_like(perfs) / len(perfs))
-    items = np.floor(request.num_items * shares).astype(int)
-    # distribute the remainder to the fastest nodes
-    rem = request.num_items - items.sum()
-    order = np.argsort(-perfs, kind="stable")
-    for i in range(rem):
-        items[order[i % len(order)]] += 1
+    if state.batched:
+        # the quantizer is shared, not reimplemented: it is plain
+        # arithmetic with a fixed tie-break (see repro.sched.split)
+        from repro.sched.split import quantized_batch_split
+        items = np.asarray(quantized_batch_split(
+            state, avail_idx, levels, shares, request.num_items))
+    else:
+        items = np.floor(request.num_items * shares).astype(int)
+        # distribute the remainder to the fastest nodes
+        rem = request.num_items - items.sum()
+        order = np.argsort(-perfs, kind="stable")
+        for i in range(rem):
+            items[order[i % len(order)]] += 1
     assignments = tuple(
         Assignment(node=state.names[avail_idx[j]],
                    items=int(items[j]), apx_level=int(levels[j]),
@@ -73,12 +93,20 @@ def _mk_plan_ref(state: ClusterState, request: InferenceRequest,
     now = state.now_s
     service: dict = {}
     finish: dict = {}
-    for a in assignments:
+    for j, a in enumerate(assignments):
         if a.items == 0:
             continue                    # empty shares are never enqueued
-        t = a.items / max(a.perf_alloc, 1e-9)
+        if state.batched:
+            t = batched_service_s(a.items,
+                                  state.perf_b[a.apx_level, avail_idx[j]],
+                                  state.batch_grid, state.max_batch)
+        else:
+            t = a.items / max(a.perf_alloc, 1e-9)
         service[a.node] = t
         finish[a.node] = now + state.backlog_of(a.node) + t
+    if state.batched:
+        meta = dict(meta or {})
+        meta["assumed_batch"] = state.max_batch
     exec_makespan = max(service.values(), default=0.0)
     finish_s = max(finish.values(), default=now)
     total_acc = sum(a.items * float(state.accuracies[a.apx_level])
@@ -106,13 +134,14 @@ def _uniform_apx_ref(state: ClusterState, request: InferenceRequest,
                      margin: float = 0.02) -> Plan:
     idx = _avail_ref(state)
     n = len(idx)
+    perf_m = _perf_ref(state)
     per_node = (request.perf_req / n) * (
         1.0 + margin + n / max(request.num_items, 1))
     levels = np.empty(n, dtype=int)
     for j, col in enumerate(idx):
         lv = state.num_levels - 1
         for m in range(state.num_levels):
-            if state.perf[m, col] >= per_node:
+            if perf_m[m, col] >= per_node:
                 lv = m
                 break
         levels[j] = lv
@@ -122,7 +151,7 @@ def _uniform_apx_ref(state: ClusterState, request: InferenceRequest,
 
 def _asymmetric_ref(state: ClusterState, request: InferenceRequest) -> Plan:
     idx = _avail_ref(state)
-    caps = state.perf[0, idx]
+    caps = _perf_ref(state)[0, idx]
     shares = caps / caps.sum()
     levels = np.zeros(len(idx), dtype=int)
     return _mk_plan_ref(state, request, idx, levels, "asymmetric", shares)
@@ -131,7 +160,7 @@ def _asymmetric_ref(state: ClusterState, request: InferenceRequest) -> Plan:
 def _proportional_ref(state: ClusterState, request: InferenceRequest,
                       margin: float = 0.02) -> Plan:
     idx = _avail_ref(state)
-    pruned = state.perf[:, idx]                    # lines 3-5
+    pruned = _perf_ref(state)[:, idx]              # lines 3-5
     n = len(idx)
     target = request.perf_req * (
         1.0 + margin + n / max(request.num_items, 1))
@@ -190,7 +219,7 @@ def _exact_oracle_ref(state: ClusterState, request: InferenceRequest,
     import dataclasses
 
     idx = _avail_ref(state)
-    pruned = state.perf[:, idx]
+    pruned = _perf_ref(state)[:, idx]
     acc = state.accuracies
     m, n = pruned.shape
     if n > max_enum_nodes:

@@ -26,7 +26,8 @@ from typing import FrozenSet, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.core.profiling import ProfilingTable
+from repro.core.profiling import (BATCH_GRID, ProfilingTable,
+                                  interp_throughput)
 
 
 def _frozen_array(a: np.ndarray) -> np.ndarray:
@@ -57,15 +58,28 @@ class ClusterState:
     # None (the from_table default) disables memoization — correct, just
     # cold — so a hand-built snapshot can never hit a stale cache line.
     perf_version: Optional[Tuple[int, int]] = None
+    # Batch-curve view: perf_b[m, j, bi] is node j's throughput at
+    # approximation m when the engine serves batches of batch_grid[bi]
+    # items; ``perf`` is the curve's REF_BATCH column. max_batch is the
+    # engine-batch cap the node runtime serves with — 1 (the default)
+    # means batching is off and every policy prices with ``perf``
+    # exactly as before the batch-aware runtime existed.
+    perf_b: Optional[np.ndarray] = None  # (levels, nodes, batches), r/o
+    batch_grid: Tuple[int, ...] = BATCH_GRID
+    max_batch: int = 1
 
     def __post_init__(self):
         assert self.perf.shape == (len(self.accuracies), len(self.names))
         assert len(self.available) == len(self.names)
+        if self.perf_b is not None:
+            assert self.perf_b.shape == self.perf.shape + (
+                len(self.batch_grid),)
 
     @classmethod
     def from_table(cls, table: ProfilingTable, *, now: float = 0.0,
                    backlogs: Optional[Mapping[str, float]] = None,
-                   standby: Tuple[str, ...] = ()) -> "ClusterState":
+                   standby: Tuple[str, ...] = (),
+                   max_batch: int = 1) -> "ClusterState":
         """Snapshot a live ProfilingTable (+ queue backlogs) at ``now``."""
         return cls(
             now_s=now,
@@ -74,7 +88,10 @@ class ClusterState:
             perf=_frozen_array(table.perf),
             accuracies=_frozen_array(table.accuracies),
             backlog_s=types.MappingProxyType(dict(backlogs or {})),
-            standby=frozenset(standby))
+            standby=frozenset(standby),
+            perf_b=_frozen_array(table.perf_b),
+            batch_grid=table.batch_grid,
+            max_batch=max_batch)
 
     # ---- views --------------------------------------------------------
     @property
@@ -109,22 +126,72 @@ class ClusterState:
         return pruned
 
     @property
-    def plan_key(self) -> Optional[Tuple[object, Tuple[bool, ...]]]:
+    def plan_key(self) -> Optional[Tuple[object, Tuple[bool, ...], int]]:
         """Memo-key prefix for planner caches: everything a plan reads
-        besides the request — the profiling view identity (table version)
-        and the serving mask. None when the snapshot has no version
-        (hand-built), which disables memoization."""
+        besides the request — the profiling view identity (table version),
+        the serving mask, and the engine-batch cap the plan prices at.
+        None when the snapshot has no version (hand-built), which
+        disables memoization."""
         if self.perf_version is None:
             return None
-        return (self.perf_version, self.available)
+        return (self.perf_version, self.available, self.max_batch)
+
+    @property
+    def batched(self) -> bool:
+        """Batch-aware pricing active? Requires a batch cap above 1 and
+        a batch-curve view to price with."""
+        return self.max_batch > 1 and self.perf_b is not None
+
+    @property
+    def eff_perf(self) -> np.ndarray:
+        """The (levels, nodes) throughput matrix at the engine batch the
+        runtime sustains when saturated (``max_batch``); equals ``perf``
+        when batching is off. Cached on the instance (SnapshotCache
+        pre-seeds it so steady-state events share one array)."""
+        if not self.batched:
+            return self.perf
+        eff = self.__dict__.get("_eff_perf")
+        if eff is None:
+            eff = np.asarray(interp_throughput(
+                self.perf_b, self.batch_grid, self.max_batch))
+            eff.flags.writeable = False
+            object.__setattr__(self, "_eff_perf", eff)
+        return eff
+
+    @property
+    def available_eff_perf(self) -> np.ndarray:
+        """``eff_perf`` pruned to the available columns."""
+        if not self.batched:
+            return self.available_perf
+        pruned = self.__dict__.get("_avail_eff_perf")
+        if pruned is None:
+            pruned = self.eff_perf[:, self.avail_idx]
+            object.__setattr__(self, "_avail_eff_perf", pruned)
+        return pruned
+
+    def service_s(self, items: int, level: int, col: int) -> float:
+        """Predicted service seconds of an ``items``-item share at
+        ``level`` on node column ``col`` — the batch-aware engine-batch
+        decomposition when batching is on, the scalar division when off.
+        This is the single predictor plans, the admission gate, and the
+        node runtime all agree on."""
+        if items <= 0:
+            return 0.0
+        if not self.batched:
+            return items / max(float(self.perf[level, col]), 1e-9)
+        from repro.core.profiling import batched_service_s
+        return batched_service_s(items, self.perf_b[level, col],
+                                 self.batch_grid, self.max_batch)
 
     def capacity(self, level: int = -1) -> float:
         """Cluster items/s over available nodes at ``level`` (default:
-        the deepest approximation — the feasibility ceiling)."""
+        the deepest approximation — the feasibility ceiling). Prices at
+        the runtime's sustained engine batch when batching is on."""
         idx = self.avail_idx
         if len(idx) == 0:
             return 0.0
-        return float(self.perf[level, idx].sum())
+        perf = self.eff_perf if self.batched else self.perf
+        return float(perf[level, idx].sum())
 
     def backlog_of(self, name: str) -> float:
         return float(self.backlog_s.get(name, 0.0))
@@ -177,14 +244,20 @@ class SnapshotCache:
         #                                 memo token, so a table swap can
         #                                 never reuse the old table's key
         self._perf: Optional[np.ndarray] = None
+        self._perf_b: Optional[np.ndarray] = None
         self._acc: Optional[np.ndarray] = None
         self._names: Tuple[str, ...] = ()
         self._avail: Optional[Tuple[bool, ...]] = None
         self._avail_idx: Optional[np.ndarray] = None
+        # eff_perf matrices per max_batch, shared across snapshots until
+        # the next version refresh (max_batch is constant per run, so
+        # this is one interpolation per table mutation, not per event)
+        self._eff: dict = {}
 
     def snapshot(self, table: ProfilingTable, *, now: float = 0.0,
                  backlogs: Optional[Mapping[str, float]] = None,
-                 standby: Tuple[str, ...] = ()) -> "ClusterState":
+                 standby: Tuple[str, ...] = (),
+                 max_batch: int = 1) -> "ClusterState":
         """Snapshot like ``ClusterState.from_table`` but O(nodes) in the
         steady state (no table mutation between events)."""
         if (self._table is not table or self._version != table.version):
@@ -192,12 +265,14 @@ class SnapshotCache:
             # *different* table (even at an equal version) must refresh,
             # or its snapshots and their memo tokens would alias
             self._perf = _frozen_array(table.perf)
+            self._perf_b = _frozen_array(table.perf_b)
             self._acc = _frozen_array(table.accuracies)
             self._names = tuple(n.name for n in table.nodes)
             self._table = table
             self._version = table.version
             self._epoch += 1
             self._avail = None          # node set may have changed shape
+            self._eff.clear()
         avail = tuple(bool(n.available) for n in table.nodes)
         if avail != self._avail:
             idx = np.array([j for j, a in enumerate(avail) if a], dtype=int)
@@ -209,6 +284,16 @@ class SnapshotCache:
             perf=self._perf, accuracies=self._acc,
             backlog_s=types.MappingProxyType(dict(backlogs or {})),
             standby=frozenset(standby),
-            perf_version=(self._cache_id, self._epoch))
+            perf_version=(self._cache_id, self._epoch),
+            perf_b=self._perf_b, batch_grid=table.batch_grid,
+            max_batch=max_batch)
         object.__setattr__(state, "_avail_idx", self._avail_idx)
+        if max_batch > 1:
+            eff = self._eff.get(max_batch)
+            if eff is None:
+                eff = np.asarray(interp_throughput(
+                    self._perf_b, table.batch_grid, max_batch))
+                eff.flags.writeable = False
+                self._eff[max_batch] = eff
+            object.__setattr__(state, "_eff_perf", eff)
         return state

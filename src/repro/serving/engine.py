@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.batching import BatchFormation
 from repro.models import attention as attn_lib
 from repro.models import model as model_lib
 from repro.models import transformer as tfm
@@ -125,22 +126,44 @@ class Engine:
 
 
 class BatchScheduler:
-    """Static-batch scheduler: groups same-length requests into engine
-    batches (the GN dispatcher decides the split across groups; this packs
-    each group's share)."""
+    """Batch scheduler for one worker group's prompt queue.
 
-    def __init__(self, batch_size: int):
+    Two modes sharing one :class:`~repro.core.batching.BatchFormation`
+    policy (the same policy the simulator's batch-aware node runtime
+    forms engine batches with):
+
+      * **static** (default, the original behaviour): ``next_batch()``
+        drains up to ``batch_size`` prompts whenever any are queued —
+        partial batches launch immediately;
+      * **continuous**: ``next_batch(now)`` launches a full batch at
+        once, but holds a partial batch until its oldest prompt has
+        waited ``window_s`` (join-on-arrival: prompts added meanwhile
+        ride the same batch; a join that fills it makes the next call
+        launch immediately).
+    """
+
+    def __init__(self, batch_size: int, *, continuous: bool = False,
+                 window_s: float = 0.0):
         self.batch_size = batch_size
+        self.continuous = continuous
+        self.formation = BatchFormation(max_batch=batch_size,
+                                        window_s=window_s)
         self.queue: List[np.ndarray] = []
+        self._enqueue_s: List[float] = []
 
-    def add(self, prompt: np.ndarray):
+    def add(self, prompt: np.ndarray, now: float = 0.0):
         self.queue.append(prompt)
+        self._enqueue_s.append(now)
 
-    def next_batch(self) -> Optional[np.ndarray]:
+    def next_batch(self, now: float = 0.0) -> Optional[np.ndarray]:
         if not self.queue:
             return None
-        n = min(self.batch_size, len(self.queue))
+        if self.continuous and not self.formation.ready(
+                len(self.queue), now - self._enqueue_s[0]):
+            return None             # hold the partial batch for joiners
+        n = self.formation.take(len(self.queue))
         batch, self.queue = self.queue[:n], self.queue[n:]
+        self._enqueue_s = self._enqueue_s[n:]
         max_l = max(len(p) for p in batch)
         out = np.zeros((n, max_l), dtype=np.int32)
         for i, p in enumerate(batch):

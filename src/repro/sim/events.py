@@ -18,6 +18,10 @@ class SimEvent:
     Kinds used by the online simulator:
       * ``arrival``         — payload["request"]: InferenceRequest
       * ``share_done``      — payload["node"], payload["share_id"]
+      * ``batch_done``      — payload["node"], payload["op_id"]
+                              (continuous-batching service op completed)
+      * ``batch_launch``    — payload["node"], payload["token"]
+                              (formation-window expiry on a held batch)
       * ``disconnect`` / ``reconnect``      — payload["node"]
       * ``straggler`` / ``straggler_clear`` — payload["node"], ["slowdown"]
     """

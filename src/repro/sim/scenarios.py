@@ -258,11 +258,31 @@ FLEET_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
 }
 
 
+# scenario-spec prefix for file-backed trace replay:
+# ``trace:path/to/log.csv`` (or .jsonl) loads the serving log through
+# :meth:`TraceArrivals.from_file` instead of a synthetic process
+TRACE_PREFIX = "trace:"
+
+
+def trace_file(table: ProfilingTable, path: str, *,
+               horizon_s: float = 0.0, **from_file_kwargs) -> Scenario:
+    """File-backed trace replay (real serving logs, CSV/JSONL)."""
+    arr = TraceArrivals.from_file(path, **from_file_kwargs).generate()
+    horizon = horizon_s or max((t for t, _ in arr), default=0.0)
+    return Scenario(name=f"trace:{path}",
+                    description=f"replay of {len(arr)} logged arrivals "
+                                f"from {path}",
+                    arrivals=arr, faults=[], horizon_s=horizon)
+
+
 def build_scenario(name: str, table: ProfilingTable, *, seed: int = 0,
                    **kwargs) -> Scenario:
+    if name.startswith(TRACE_PREFIX):
+        return trace_file(table, name[len(TRACE_PREFIX):], **kwargs)
     builder = SCENARIOS.get(name) or FLEET_SCENARIOS.get(name)
     if builder is None:
         raise KeyError(
             f"unknown scenario {name!r}; have "
-            f"{sorted(SCENARIOS) + sorted(FLEET_SCENARIOS)}")
+            f"{sorted(SCENARIOS) + sorted(FLEET_SCENARIOS)}, or "
+            f"'{TRACE_PREFIX}<path>' for file-backed replay")
     return builder(table, seed=seed, **kwargs)

@@ -12,6 +12,19 @@ now happening *during* execution instead of between manual calls).
 Per-request accounting: arrival -> dispatch -> per-share queue wait ->
 last-share completion; deadline = the request's ``latency_budget_s``.
 
+Batch-aware node runtime: with ``max_batch > 1`` each node serves
+*engine batches* instead of whole shares — continuous batching. Batches
+form from the FIFO queue at every service boundary (join-on-arrival: a
+share that arrives between batches joins the next one), restricted to
+one approximation level per batch (different levels are different model
+variants), capped at ``max_batch`` items, and timed on the profiling
+table's batch curve. Consecutive full batches of a single share
+coalesce into one event (identical timing, O(1) events per share), so
+batching does not inflate the event count; a partial batch may be held
+for a short formation window (``BatchFormation.window_s``) to let
+joiners fill it. ``max_batch=1`` (the default) is the pre-batching
+one-share-at-a-time model, byte-identical to PR 1-4 behaviour.
+
 Closed-loop control (optional): each event builds one immutable
 ``ClusterState`` snapshot (availability, profiling view, per-node queue
 backlogs, standby set) shared by both controllers. The
@@ -28,12 +41,14 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.control.admission import (ADMIT, DEGRADE, REJECT,
                                      AdmissionController)
 from repro.control.autoscaler import RETIRE, SPAWN, Autoscaler, ScalingAction
+from repro.core.batching import BatchFormation
 from repro.core.requests import (Assignment, Dispatch, ExecutionResult,
                                  InferenceRequest, violation_summary)
 from repro.core.resource_manager import Event, GatewayNode
@@ -52,7 +67,15 @@ class TimedFault:
 
 @dataclasses.dataclass
 class _Share:
-    """One node's slice of a dispatched request, living on a work queue."""
+    """One node's slice of a dispatched request, living on a work queue.
+
+    Under continuous batching a share is *divisible*: ``remaining``
+    counts items not yet completed and ``in_flight`` the items claimed
+    by the node's active engine-batch op; ``service_s`` accumulates the
+    share's item-weighted slice of every op it rode. The sequential
+    (``max_batch=1``) path never touches either and keeps the exact
+    pre-batching lifecycle.
+    """
     share_id: int
     rid: int
     epoch: int                # request dispatch generation (stale detection)
@@ -62,44 +85,75 @@ class _Share:
     finish_s: float = -1.0
     service_s: float = 0.0
     predicted_s: float = 0.0  # cached predictor value (backlog accounting)
+    remaining: int = 0        # items not yet completed (batched mode)
+    in_flight: int = 0        # items claimed by the active op
+
+    @property
+    def unclaimed(self) -> int:
+        return self.remaining - self.in_flight
 
 
-class _NodeQueue:
-    """FIFO work queue + single-server execution model for one node.
+@dataclasses.dataclass
+class _BatchOp:
+    """One engine-batch service op on a node: either a *full run* —
+    ``n_batches`` consecutive full engine batches of one share's items,
+    coalesced into a single event because nothing can join a full batch
+    — or a *mixed/partial batch* of up to ``max_batch`` items spanning
+    same-level shares at the FIFO head."""
+    op_id: int
+    level: int
+    takes: List[Tuple[_Share, int]]     # (share, items claimed)
+    n_items: int                        # total items the op completes
+    batch_size: int                     # engine batch the curve prices
+    start_s: float = 0.0
+    finish_s: float = 0.0
 
-    Beyond executing, the queue is a *sensor*: it reports depth, backlog
-    seconds, and oldest-share age — the signals the admission controller
-    and autoscaler feed on. The backlog sum is maintained incrementally
-    (O(1) per enqueue/dequeue instead of O(queued shares) per read) and
-    revalidated lazily when the predictor's inputs change — the
-    ``version`` arguments below carry ``SimBackend.pred_version``, which
-    bumps on every table mutation or straggler derate.
+
+class NodeRuntime:
+    """Per-node execution model: FIFO work queue + batch-forming server.
+
+    With ``formation.max_batch == 1`` this is the original sequential
+    one-share-at-a-time server (``running``/``pop_next``); above 1 the
+    server forms engine batches continuously (see module docstring).
+    Beyond executing, the runtime is a *sensor*: it reports depth,
+    backlog seconds, and oldest-share age — the signals the admission
+    controller and autoscaler feed on. The backlog sum is maintained
+    incrementally (O(1) per enqueue/dequeue/claim instead of O(queued
+    shares) per read) and revalidated lazily when the predictor's
+    inputs change — the ``version`` arguments below carry
+    ``SimBackend.pred_version``, which bumps on every table mutation or
+    straggler derate. The share predictor is batch-aware, so the sums
+    stay correct under batched service times.
     """
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, formation: BatchFormation = BatchFormation()):
         self.name = name
+        self.formation = formation
         self.up = True
-        self.running: Optional[_Share] = None
+        self.running: Optional[_Share] = None       # sequential mode
+        self.active: Optional[_BatchOp] = None      # batched mode
+        self.forming_token = 0      # invalidates scheduled launch timers
         self.queue: Deque[_Share] = collections.deque()
         self._queued_pred_s = 0.0
         self._pred_version: object = None
 
-    def _revalidate(self, predictor: Callable[[Assignment], float],
+    def _revalidate(self, predictor: Callable[[_Share], float],
                     version: object):
         """Re-predict every queued share when the profiling view or the
         straggler derates changed since the cached sum was built."""
         if version != self._pred_version:
             total = 0.0
             for s in self.queue:
-                s.predicted_s = predictor(s.assignment)
+                s.predicted_s = predictor(s)
                 total += s.predicted_s
             self._queued_pred_s = total
             self._pred_version = version
 
     def enqueue(self, share: _Share,
-                predictor: Callable[[Assignment], float], version: object):
+                predictor: Callable[[_Share], float], version: object):
         self._revalidate(predictor, version)
-        share.predicted_s = predictor(share.assignment)
+        share.remaining = share.assignment.items
+        share.predicted_s = predictor(share)
         self.queue.append(share)
         self._queued_pred_s += share.predicted_s
 
@@ -109,6 +163,28 @@ class _NodeQueue:
         if not self.queue:
             self._queued_pred_s = 0.0   # pin float drift at the idle point
         return share
+
+    def claim(self, takes: List[Tuple[_Share, int]],
+              predictor: Callable[[_Share], float]):
+        """Mark op items in-flight, keeping the backlog sum incremental:
+        each claimed share's queued prediction shrinks to its unclaimed
+        remainder (O(takes), not O(queue))."""
+        for share, take in takes:
+            old = share.predicted_s
+            share.in_flight = take
+            share.predicted_s = predictor(share)
+            self._queued_pred_s += share.predicted_s - old
+
+    def settle(self, op: _BatchOp) -> List[_Share]:
+        """Apply a completed op: consume the claimed items and pop the
+        completed FIFO prefix. Returns the shares that finished."""
+        for share, take in op.takes:
+            share.remaining -= take
+            share.in_flight = 0
+        done = []
+        while self.queue and self.queue[0].remaining == 0:
+            done.append(self.pop_next())
+        return done
 
     def drop_rid(self, rid: int):
         self.queue = collections.deque(s for s in self.queue if s.rid != rid)
@@ -120,33 +196,37 @@ class _NodeQueue:
 
     # ---- control-loop signals ---------------------------------------
     def depth(self) -> int:
-        """Shares on this node (running + queued)."""
+        """Shares on this node (running + queued). Batched mode counts
+        queued shares only — in-flight shares stay queued until done."""
         return len(self.queue) + (1 if self.running is not None else 0)
 
-    def backlog_s(self, now: float,
-                  predictor: Callable[[Assignment], float],
-                  version: object) -> float:
-        """Predicted seconds of work ahead of a share enqueued now: the
-        running share's remaining time plus every queued share's predicted
-        service time (noise-free, so reading the signal is side-effect
-        free). O(1) in the steady state via the incremental sum."""
-        self._revalidate(predictor, version)
+    def _active_remaining_s(self, now: float) -> float:
         total = 0.0
         if self.running is not None:
             total += max(0.0, self.running.finish_s - now)
-        return total + self._queued_pred_s
+        if self.active is not None:
+            total += max(0.0, self.active.finish_s - now)
+        return total
+
+    def backlog_s(self, now: float,
+                  predictor: Callable[[_Share], float],
+                  version: object) -> float:
+        """Predicted seconds of work ahead of a share enqueued now: the
+        in-service work's remaining time plus every queued share's
+        predicted service time over its unclaimed items (noise-free, so
+        reading the signal is side-effect free). O(1) in the steady
+        state via the incremental sum."""
+        self._revalidate(predictor, version)
+        return self._active_remaining_s(now) + self._queued_pred_s
 
     def backlog_s_recompute(self, now: float,
-                            predictor: Callable[[Assignment], float]
-                            ) -> float:
+                            predictor: Callable[[_Share], float]) -> float:
         """Pre-PR backlog read: walk the queue calling the predictor per
         share. Retained as the baseline ``bench_sched.py`` measures the
         incremental sensor against (``legacy_control_plane=True``)."""
-        total = 0.0
-        if self.running is not None:
-            total += max(0.0, self.running.finish_s - now)
+        total = self._active_remaining_s(now)
         for s in self.queue:
-            total += predictor(s.assignment)
+            total += predictor(s)
         return total
 
     def oldest_age_s(self, now: float) -> float:
@@ -154,6 +234,10 @@ class _NodeQueue:
         if not self.queue:
             return 0.0
         return max(0.0, now - self.queue[0].enqueue_s)
+
+
+# back-compat alias: PR 1-4 name for the sequential-mode runtime
+_NodeQueue = NodeRuntime
 
 
 @dataclasses.dataclass
@@ -236,6 +320,17 @@ class SimReport:
         s["goodput_rps"] = sum(
             r.meets_deadline for r in admitted) / span
         s["redistributes"] = float(sum(r.redistributed for r in self.records))
+        # plan-predicted vs realized makespan: how honestly the policy's
+        # (batch-aware) pricing matches what the runtime then does. Over
+        # admitted, completed, never-redistributed requests; 0 when no
+        # request qualifies (or no gate ran, so no plan was retained)
+        errs = [
+            abs((r.finish_s - r.dispatch_s) - r.plan.makespan_s)
+            / max(r.finish_s - r.dispatch_s, 1e-12)
+            for r in self.records
+            if r.admitted and r.done and not r.redistributed
+            and r.plan is not None]
+        s["plan_makespan_err"] = (sum(errs) / len(errs)) if errs else 0.0
         # oracle (or any policy) falling back to a heuristic plan: count
         # it so optimality-gap numbers can't be polluted unnoticed
         s["plan_fallbacks"] = float(sum(
@@ -264,11 +359,28 @@ class OnlineSimulator:
                  scenario: str = "custom", horizon_s: float = 0.0,
                  admission: Optional[AdmissionController] = None,
                  autoscaler: Optional[Autoscaler] = None,
-                 legacy_control_plane: bool = False):
+                 legacy_control_plane: bool = False,
+                 max_batch: Optional[int] = None,
+                 formation_window_s: float = 0.0):
         self.gn = gn
         self.backend = gn.backend
         self.admission = admission
         self.autoscaler = autoscaler
+        # continuous batching: engine-batch cap per node runtime. None
+        # adopts the GN's own cap, so planner pricing and execution are
+        # configured in one place; 1 = the sequential pre-batching model
+        self.batching = BatchFormation(
+            max_batch=gn.max_batch if max_batch is None else max_batch,
+            window_s=formation_window_s)
+        if max_batch is not None and max_batch != gn.max_batch:
+            # the GN snapshots carry gn.max_batch into every Plan — a
+            # runtime batching differently would break the plan-once
+            # predicted==realized contract silently
+            raise ValueError(
+                f"simulator max_batch={max_batch} disagrees with the "
+                f"GatewayNode's max_batch={gn.max_batch}; construct the "
+                "GN with the same cap so plans price what the runtime "
+                "executes")
         # True routes snapshots through ClusterState.from_table (full copy
         # per event) and backlog reads through the per-share recompute —
         # the pre-PR control plane, kept so bench_sched.py can measure
@@ -281,14 +393,16 @@ class OnlineSimulator:
             admission.policy = gn.policy_obj
         self.clock = SimClock()
         self.events = EventQueue()
-        self.nodes: Dict[str, _NodeQueue] = {
-            n.name: _NodeQueue(n.name) for n in gn.table.nodes}
+        self.nodes: Dict[str, NodeRuntime] = {
+            n.name: NodeRuntime(n.name, self.batching)
+            for n in gn.table.nodes}
         self.records: Dict[int, RequestRecord] = {}
         self.log: List[str] = []
         self.scenario = scenario
         self.horizon_s = horizon_s or (
             max((t for t, _ in arrivals), default=0.0))
         self._share_seq = 0
+        self._op_seq = 0
         self._parked: List[InferenceRequest] = []   # no available nodes
         seen_rids = set()
         for t, req in arrivals:
@@ -349,6 +463,11 @@ class OnlineSimulator:
         elif ev.kind == "share_done":
             self._share_done(ev.payload["node"], ev.payload["share_id"])
             self._autoscale_tick(now, None)
+        elif ev.kind == "batch_done":
+            self._batch_done(ev.payload["node"], ev.payload["op_id"])
+            self._autoscale_tick(now, None)
+        elif ev.kind == "batch_launch":
+            self._batch_launch(ev.payload["node"], ev.payload["token"])
         elif ev.kind == "node_up":
             self._node_up(ev.payload["node"])
         elif ev.kind == "disconnect":
@@ -366,10 +485,21 @@ class OnlineSimulator:
             raise ValueError(f"unknown sim event kind: {ev.kind}")
 
     # ---- closed-loop control ----------------------------------------
+    def _share_pred(self, share: _Share) -> float:
+        """Deterministic service prediction for one queued share's
+        unclaimed items — the scalar predictor when batching is off, the
+        engine-batch decomposition (at the unclaimed remainder) when on;
+        the same math the planners price Plans with."""
+        if not self.batching.enabled:
+            return self.backend.predicted_time(share.assignment)
+        return self.backend.batched_predicted_time(
+            share.assignment, self.batching.max_batch,
+            items=share.unclaimed)
+
     def _backlogs(self, now: float) -> Dict[str, float]:
         """Per-node backlog seconds from the queue sensors — incremental
         O(nodes) reads unless the legacy control plane was requested."""
-        pred = self.backend.predicted_time
+        pred = self._share_pred
         if self.legacy_control_plane:
             return {name: nq.backlog_s_recompute(now, pred)
                     for name, nq in self.nodes.items()}
@@ -389,7 +519,8 @@ class OnlineSimulator:
         if self.legacy_control_plane:
             return ClusterState.from_table(self.gn.table, now=now,
                                            backlogs=backlogs,
-                                           standby=standby)
+                                           standby=standby,
+                                           max_batch=self.batching.max_batch)
         return self.gn.snapshot(now=now, backlogs=backlogs,
                                 standby=standby)
 
@@ -507,7 +638,7 @@ class OnlineSimulator:
         rec.per_node_time = {}
         rec.queue_wait_s = 0.0
         rec.pending_shares = sum(1 for a in d.assignments if a.items > 0)
-        pred = self.backend.predicted_time
+        pred = self._share_pred
         version = self.backend.pred_version
         for a in d.assignments:
             if a.items == 0:
@@ -519,7 +650,10 @@ class OnlineSimulator:
             nq.enqueue(share, pred, version)
             self._maybe_start(nq)
 
-    def _maybe_start(self, nq: _NodeQueue):
+    def _maybe_start(self, nq: NodeRuntime):
+        if self.batching.enabled:
+            self._maybe_start_batched(nq)
+            return
         if not nq.up or nq.running is not None or not nq.queue:
             return
         share = nq.pop_next()
@@ -536,9 +670,15 @@ class OnlineSimulator:
         if share is None or share.share_id != share_id:
             return                      # aborted by a disconnect: stale event
         nq.running = None
+        self._complete_share(nq, share)
+        self._maybe_start(nq)
+
+    def _complete_share(self, nq: NodeRuntime, share: _Share):
+        """Account one finished share against its request (shared by the
+        sequential and the batched completion paths)."""
         rec = self.records[share.rid]
         if share.epoch == rec.epoch and not rec.done:
-            rec.per_node_time[node] = share.service_s
+            rec.per_node_time[nq.name] = share.service_s
             rec.queue_wait_s = max(rec.queue_wait_s,
                                    share.start_s - rec.dispatch_s)
             rec.pending_shares -= 1
@@ -546,6 +686,97 @@ class OnlineSimulator:
                 self._finalize(rec)
         # else: a share of a superseded dispatch generation — discard,
         # the node just paid the time.
+
+    # ---- continuous batching (max_batch > 1) -------------------------
+    def _form_op(self, nq: NodeRuntime) -> _BatchOp:
+        """Form the next engine-batch op from the FIFO head: a coalesced
+        full-run when the head share alone fills the cap (nothing could
+        join those batches anyway), else a mixed/partial batch over the
+        same-level FIFO prefix."""
+        cap = self.batching.max_batch
+        head = nq.queue[0]
+        level = head.assignment.apx_level
+        if head.unclaimed >= cap:
+            n_full = head.unclaimed // cap
+            return _BatchOp(op_id=0, level=level,
+                            takes=[(head, n_full * cap)],
+                            n_items=n_full * cap, batch_size=cap)
+        takes = [(head, head.unclaimed)]
+        total = head.unclaimed
+        for s in itertools.islice(nq.queue, 1, None):
+            if total >= cap:
+                break
+            if s.assignment.apx_level != level:
+                break       # strict FIFO: never skip over a share
+            # a joiner contributes at most its own tail remainder: taking
+            # items out of a share's full engine batches would fragment
+            # them into a new partial batch later — slower than the plan
+            # priced, which the straggler EWMA would misread as a slow
+            # node. Tail-only joins are a pure win for both shares.
+            tail = s.unclaimed if s.unclaimed < cap else s.unclaimed % cap
+            take = min(tail, cap - total)
+            if take == 0:
+                break       # clean multiple: nothing joinable in order
+            takes.append((s, take))
+            total += take
+        return _BatchOp(op_id=0, level=level, takes=takes,
+                        n_items=total, batch_size=min(total, cap))
+
+    def _maybe_start_batched(self, nq: NodeRuntime):
+        if not nq.up or nq.active is not None or not nq.queue:
+            return
+        now = self.clock.now
+        op = self._form_op(nq)
+        oldest_wait = now - nq.queue[0].enqueue_s
+        if not self.batching.ready(op.n_items, oldest_wait):
+            # partial batch inside the formation window: hold it open
+            # for joiners; the timer forces the launch if none arrive
+            # (an arrival that fills the batch re-enters here first)
+            nq.forming_token += 1
+            self.events.push(
+                self.batching.hold_until(nq.queue[0].enqueue_s),
+                "batch_launch", node=nq.name, token=nq.forming_token)
+            return
+        self._launch_op(nq, op)
+
+    def _launch_op(self, nq: NodeRuntime, op: _BatchOp):
+        now = self.clock.now
+        nq.forming_token += 1           # cancel any pending hold timer
+        self._op_seq += 1
+        op.op_id = self._op_seq
+        op.start_s = now
+        op.finish_s = now + self.backend.engine_batch_time(
+            nq.name, op.level, op.n_items, op.batch_size)
+        for share, _ in op.takes:
+            if share.start_s < 0:
+                share.start_s = now
+        nq.claim(op.takes, self._share_pred)
+        nq.active = op
+        self.events.push(op.finish_s, "batch_done", node=nq.name,
+                         op_id=op.op_id)
+
+    def _batch_launch(self, node: str, token: int):
+        """Formation-window expiry: launch the held partial batch."""
+        nq = self.nodes[node]
+        if token != nq.forming_token or nq.active is not None:
+            return                      # superseded or already launched
+        if not nq.up or not nq.queue:
+            return
+        self._launch_op(nq, self._form_op(nq))
+
+    def _batch_done(self, node: str, op_id: int):
+        nq = self.nodes[node]
+        op = nq.active
+        if op is None or op.op_id != op_id:
+            return                      # aborted by a disconnect: stale event
+        nq.active = None
+        duration = op.finish_s - op.start_s
+        for share, take in op.takes:
+            # item-weighted attribution: each share pays for exactly the
+            # slice of the op its items occupied
+            share.service_s += duration * (take / op.n_items)
+        for share in nq.settle(op):
+            self._complete_share(nq, share)
         self._maybe_start(nq)
 
     def _finalize(self, rec: RequestRecord):
@@ -597,6 +828,15 @@ class OnlineSimulator:
             if _current(nq.running):
                 affected.append(nq.running.rid)
             nq.running = None           # abort in-flight share
+        if nq.active is not None:
+            # abort the in-flight engine batch: every rider loses its
+            # whole share (all-or-nothing, like the sequential abort) —
+            # mid-batch re-DISTRIBUTE (paper Fig. 9, batched)
+            for s, _ in nq.active.takes:
+                if _current(s) and s.rid not in affected:
+                    affected.append(s.rid)
+            nq.active = None
+        nq.forming_token += 1           # cancel any held formation
         for s in nq.queue:
             if _current(s) and s.rid not in affected:
                 affected.append(s.rid)

@@ -53,7 +53,7 @@ def test_registry_names_match_legacy_shim():
     assert set(registered_policies()) == set(POLICIES)
     assert registered_policies() == ["uniform", "uniform_apx",
                                      "asymmetric", "proportional",
-                                     "exact_oracle"]
+                                     "exact_oracle", "accuracy_edf"]
 
 
 def test_every_registered_policy_shim_compatible(pool):
