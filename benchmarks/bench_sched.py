@@ -21,6 +21,12 @@ Sections:
     gateway, fast vs legacy control plane.
   * e2e — the classic ``run_sim.py --scenario all`` sweep shape
     (6 scenarios x 5 policies x {none, full}), fast vs legacy.
+  * cells (``--cells`` / ``--cells-json`` / ``--check-cells``) — the
+    sharded control plane at fleet-1024: the same trace through the
+    single gateway and through ShardedSimulator at cells 1/4/16, with a
+    hard cells=1 identity assert, end-to-end speedups, and a cProfile of
+    the biggest sharded run showing the root router's share of the event
+    loop. The committed ``BENCH_6.json`` anchors this section.
 
 ``--json`` writes the compact trajectory file; the committed
 ``BENCH_4.json`` at the repo root is the anchor. ``--check ANCHOR``
@@ -59,13 +65,16 @@ from repro.core.profiling import ProfilingTable
 from repro.core.resource_manager import GatewayNode
 from repro.core.variants import VariantPool
 from repro.sched import SnapshotCache, get_policy, resolve_policy
-from repro.sim import SCENARIOS, OnlineSimulator, build_scenario
+from repro.sim import (SCENARIOS, OnlineSimulator, ShardedSimulator,
+                       build_scenario)
 from repro.sim.arrivals import RequestSampler
 
 ARCH = "phi4-mini-3.8b"
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_ANCHOR = os.path.join(REPO_ROOT, "BENCH_4.json")
+BENCH_CELLS = os.path.join(REPO_ROOT, "BENCH_6.json")
 PLAN_POLICIES = ("uniform", "uniform_apx", "asymmetric", "proportional")
+CELL_COUNTS = (1, 4, 16)
 
 
 @functools.lru_cache(maxsize=1)
@@ -248,6 +257,160 @@ def bench_batching(seed: int, horizon_s: float = 5.0) -> dict:
             "plan_err_on": round(on["plan_makespan_err"], 5)}
 
 
+def _plans_from_report(report) -> int:
+    """Planning passes in an ungated run: one per non-rejected request
+    plus one per disconnect-triggered re-DISTRIBUTE."""
+    return sum(1 + r.redistributed for r in report.records
+               if not r.rejected)
+
+
+def _profile_root_overhead(profile) -> dict:
+    """Digest a cProfile of a sharded run: what fraction of total CPU the
+    *root* layer (merge loop, router, queue peeks) spent, plus the top
+    self-time hotspots — the event-loop profile that shows the router is
+    bookkeeping, not the new bottleneck."""
+    import pstats
+    st = pstats.Stats(profile)
+    total_tt = sum(rec[2] for rec in st.stats.values())
+    root_tt = 0.0
+    top = []
+    for (fn, _line, name), (_cc, _nc, tt, ct, _callers) in st.stats.items():
+        base = os.path.basename(fn)
+        if (base == "sharded.py" or base == "shard.py"
+                or (base == "events.py" and name == "peek")):
+            root_tt += tt
+        top.append((tt, ct, f"{base}:{name}"))
+    top.sort(reverse=True)
+    return {
+        "root_overhead_frac": round(root_tt / max(total_tt, 1e-9), 4),
+        "total_cpu_s": round(total_tt, 3),
+        "top_self_time": [
+            {"func": name, "tottime_s": round(tt, 3),
+             "cumtime_s": round(ct, 3)}
+            for tt, ct, name in top[:8]],
+    }
+
+
+def bench_cells(seed: int, fleet: int = 1024,
+                cell_counts=CELL_COUNTS) -> dict:
+    """Sharded-control-plane scaling at fleet-1024: the same seeded
+    fleet-1024 trace through the unsharded single gateway and through
+    ``ShardedSimulator`` at each cell count. cells=1 must reproduce the
+    single gateway's serving metrics and log exactly (hard assert — the
+    sharding layer is not allowed to change behaviour), and the largest
+    cell count is re-run under cProfile (separately, so profiling does
+    not pollute the timing) to measure the root router's share of the
+    event loop."""
+    profiles = synthetic_fleet(fleet, seed=seed)
+
+    def factory(ps):
+        return ProfilingTable(_pool(), ps, seq_len=512)
+
+    table = factory(profiles)
+    sc = build_scenario(f"fleet-{fleet}", table, seed=seed)
+    gn = GatewayNode(table, SimBackend(table, seed=seed),
+                     policy="proportional")
+    plain = OnlineSimulator(gn, sc.arrivals, sc.faults, scenario=sc.name,
+                            horizon_s=sc.horizon_s).run()
+    plain_summary = plain.summary()
+    result = {
+        "scenario": f"fleet-{fleet}",
+        "arrivals": len(sc.arrivals),
+        "single_gateway": {
+            "wall_s": round(plain.wall_s, 3),
+            "events": int(plain.n_events),
+            "events_per_sec": round(
+                plain.n_events / max(plain.wall_s, 1e-9), 1),
+            "plans_per_sec": round(
+                _plans_from_report(plain) / max(plain.wall_s, 1e-9), 1),
+            "goodput_rps": round(plain_summary["goodput_rps"], 2),
+            "deadline_violation_rate": round(
+                plain_summary["deadline_violation_rate"], 4),
+        },
+        "cells": {},
+        "speedup_vs_single": {},
+    }
+    biggest = max(cell_counts)
+    for cells in cell_counts:
+        sh = ShardedSimulator(factory, profiles, sc.arrivals, sc.faults,
+                              cells=cells, policy="proportional",
+                              seed=seed, scenario=sc.name,
+                              horizon_s=sc.horizon_s)
+        rep = sh.run()
+        s = rep.summary()
+        if cells == 1:
+            mism = [k for k in plain_summary
+                    if abs(plain_summary[k] - s[k]) > 1e-9]
+            assert not mism and plain.log == rep.log, (
+                f"cells=1 diverged from the unsharded gateway on {mism} "
+                "— the sharding layer changed serving behaviour")
+            result["cells1_identical"] = True
+        result["cells"][str(cells)] = {
+            "wall_s": round(rep.wall_s, 3),
+            "events": int(rep.n_events),
+            "events_per_sec": round(
+                rep.n_events / max(rep.wall_s, 1e-9), 1),
+            "plans_per_sec": round(
+                sh.plans_made() / max(rep.wall_s, 1e-9), 1),
+            "goodput_rps": round(s["goodput_rps"], 2),
+            "deadline_violation_rate": round(
+                s["deadline_violation_rate"], 4),
+        }
+        result["speedup_vs_single"][str(cells)] = round(
+            plain.wall_s / max(rep.wall_s, 1e-9), 2)
+    # event-loop profile of the biggest sharded run (deferred PR 4
+    # follow-up): separate run so cProfile overhead never touches the
+    # timed numbers above
+    import cProfile
+    sh = ShardedSimulator(factory, profiles, sc.arrivals, sc.faults,
+                          cells=biggest, policy="proportional", seed=seed,
+                          scenario=sc.name, horizon_s=sc.horizon_s)
+    prof = cProfile.Profile()
+    prof.enable()
+    sh.run()
+    prof.disable()
+    result["profile"] = _profile_root_overhead(prof)
+    return result
+
+
+def check_cells_regression(result: dict, anchor_path: str,
+                           tolerance: float) -> int:
+    """Gate for the sharded-control-plane section (BENCH_6 anchor): the
+    cells=1 identity must hold (hard requirement, no tolerance) and the
+    end-to-end speedup of the largest cell count vs the single gateway
+    must not shrink more than ``tolerance``. Speedups are same-process
+    ratios, so the comparison tracks code, not host speed."""
+    with open(anchor_path) as f:
+        anchor = json.load(f)
+    failures = []
+    if not result.get("cells1_identical"):
+        failures.append("cells=1 is no longer metric-identical to the "
+                        "unsharded gateway")
+    biggest = str(max(int(c) for c in result["speedup_vs_single"]))
+    fresh = result["speedup_vs_single"][biggest]
+    base = anchor.get("speedup_vs_single", {}).get(biggest)
+    if base and fresh < base * (1.0 - tolerance):
+        failures.append(
+            f"cells={biggest} end-to-end speedup {fresh:.2f}x < "
+            f"{(1 - tolerance):.0%} of anchor {base:.2f}x")
+    if fresh < 3.0:
+        # the sharding acceptance bar is absolute: >= 3x end-to-end at
+        # fleet-1024, whatever the anchor drifted to
+        failures.append(
+            f"cells={biggest} end-to-end speedup {fresh:.2f}x below the "
+            "3x acceptance bar")
+    if failures:
+        print("sharded control-plane REGRESSION vs "
+              f"{os.path.basename(anchor_path)}:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"cells check OK vs {os.path.basename(anchor_path)} "
+          f"(tolerance {tolerance:.0%}; cells={biggest} at {fresh:.2f}x)",
+          file=sys.stderr)
+    return 0
+
+
 def check_regression(result: dict, anchor_path: str,
                      tolerance: float) -> int:
     """Exit status 1 when plans/sec or events/sec regressed > tolerance
@@ -332,6 +495,20 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.30,
                     help="allowed fractional slowdown before --check "
                          "fails")
+    ap.add_argument("--cells", action="store_true",
+                    help="also run the sharded-control-plane section "
+                         "(fleet-1024 at cells "
+                         f"{CELL_COUNTS} vs the single gateway — the "
+                         "slowest section, ~1-2 min)")
+    ap.add_argument("--cells-json", nargs="?", const=BENCH_CELLS,
+                    default="",
+                    help="write the sharded section's trajectory JSON "
+                         f"(default path: {os.path.basename(BENCH_CELLS)} "
+                         "at the repo root); implies --cells")
+    ap.add_argument("--check-cells", default="",
+                    help="compare the sharded section against this "
+                         "anchor (BENCH_6.json) and fail on regression "
+                         "or a broken cells=1 identity; implies --cells")
     args = ap.parse_args(argv)
 
     result = {"bench": "bench_sched", "arch": ARCH, "seed": args.seed,
@@ -379,14 +556,48 @@ def main(argv=None) -> int:
             "pre_pr_wall_clock_s": 11.75, "post_pr_wall_clock_s": 3.34,
             "speedup": 3.52, "csv_identical": True}
 
+    cells_result = None
+    if args.cells or args.cells_json or args.check_cells:
+        print("# sharded control plane, fleet-1024 "
+              f"(cells {CELL_COUNTS} vs single gateway)")
+        cells_result = {"bench": "bench_sched_cells", "arch": ARCH,
+                        "seed": args.seed, "cell_counts": list(CELL_COUNTS)}
+        cells_result.update(bench_cells(args.seed))
+        sg = cells_result["single_gateway"]
+        print(f"  single gateway: {sg['wall_s']:.2f}s, "
+              f"{sg['events_per_sec']:.0f} ev/s, "
+              f"{sg['plans_per_sec']:.0f} plans/s, "
+              f"violation rate {sg['deadline_violation_rate']:.3f}")
+        for c in sorted(cells_result["cells"], key=int):
+            row = cells_result["cells"][c]
+            sp = cells_result["speedup_vs_single"][c]
+            print(f"  cells={c:>2s}: {row['wall_s']:.2f}s "
+                  f"({sp:.2f}x), {row['events_per_sec']:.0f} ev/s, "
+                  f"{row['plans_per_sec']:.0f} plans/s, "
+                  f"violation rate {row['deadline_violation_rate']:.3f}")
+        pr = cells_result["profile"]
+        print(f"  root overhead (router + merge loop): "
+              f"{pr['root_overhead_frac']:.1%} of "
+              f"{pr['total_cpu_s']:.1f}s CPU at cells="
+              f"{max(CELL_COUNTS)}")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.json}", file=sys.stderr)
+    if args.cells_json and cells_result is not None:
+        with open(args.cells_json, "w") as f:
+            json.dump(cells_result, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.cells_json}", file=sys.stderr)
+    status = 0
     if args.check:
-        return check_regression(result, args.check, args.tolerance)
-    return 0
+        status = check_regression(result, args.check, args.tolerance)
+    if args.check_cells and cells_result is not None:
+        status = max(status, check_cells_regression(
+            cells_result, args.check_cells, args.tolerance))
+    return status
 
 
 if __name__ == "__main__":

@@ -81,7 +81,8 @@ from repro.core.variants import VariantPool
 from repro.sched import registered_policies
 from repro.sched.policy import REFERENCE_PREFIX
 from repro.sim import (FLEET_HORIZONS, FLEET_SCENARIOS, FLEET_SIZES,
-                       SCENARIOS, OnlineSimulator, build_scenario)
+                       SCENARIOS, OnlineSimulator, ShardedSimulator,
+                       build_scenario)
 from repro.sim.scenarios import TRACE_PREFIX
 
 ARCH = "phi4-mini-3.8b"
@@ -102,6 +103,16 @@ SWEEP_POLICIES = ("uniform", "uniform_apx", "asymmetric", "proportional",
 BATCH_AB_SEQ_LEN = 8
 
 
+def _fleet_profiles(scenario_name: str, num_standby: int, seed: int):
+    """NodeProfile list for a scenario: a synthetic heterogeneous fleet
+    of the matching size for fleet scenarios, else the paper's default
+    4-board cluster (+ standby slices)."""
+    if scenario_name in FLEET_SIZES:
+        return synthetic_fleet(FLEET_SIZES[scenario_name], seed=seed,
+                               num_standby=num_standby)
+    return cluster_nodes(num_standby)
+
+
 def _fresh_table(scenario_name: str, num_standby: int, seed: int,
                  seq_len: int = 512) -> ProfilingTable:
     """Each run gets its own table: the GN mutates it (straggler EWMA,
@@ -111,37 +122,57 @@ def _fresh_table(scenario_name: str, num_standby: int, seed: int,
     scenarios get a synthetic heterogeneous fleet of the matching size
     instead of the paper's default 4-board cluster."""
     pool = VariantPool(get_config(ARCH))
-    if scenario_name in FLEET_SIZES:
-        nodes = synthetic_fleet(FLEET_SIZES[scenario_name], seed=seed,
-                                num_standby=num_standby)
-    else:
-        nodes = cluster_nodes(num_standby)
+    nodes = _fleet_profiles(scenario_name, num_standby, seed)
     return ProfilingTable(pool, nodes, seq_len=seq_len)
 
 
 def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
             horizon_s: float, noise_std: float, num_standby: int,
             admission_rate: float, verbose: bool, max_batch: int = 1,
-            seq_len: int = 512, formation_window_s: float = 0.0) -> dict:
+            seq_len: int = 512, formation_window_s: float = 0.0,
+            cells: int = 0, cell_strategy: str = "stripe",
+            router: str = "least-backlog",
+            rebalance_s: float = 0.0) -> dict:
     t_wall = time.perf_counter()
     table = _fresh_table(scenario_name, num_standby, seed, seq_len=seq_len)
     sc = build_scenario(scenario_name, table, seed=seed,
                         horizon_s=horizon_s)
-    gn = GatewayNode(table, SimBackend(table, noise_std=noise_std,
-                                       seed=seed), policy=policy,
-                     max_batch=max_batch)
-    admission = None
-    if control in ("admission", "full"):
-        admission = AdmissionController(
-            table, rate=admission_rate if admission_rate > 0 else None)
-    autoscaler = None
-    if control in ("autoscale", "full") and num_standby > 0:
-        standby_names = [n.name for n in table.nodes if not n.available]
-        autoscaler = Autoscaler(table, standby_names)
-    sim = OnlineSimulator(gn, sc.arrivals, sc.faults,
-                          scenario=sc.name, horizon_s=sc.horizon_s,
-                          admission=admission, autoscaler=autoscaler,
-                          formation_window_s=formation_window_s)
+    if cells > 0:
+        # sharded control plane: per-cell gateway stacks behind a root
+        # router. cells=1 is byte-identical to the unsharded path below
+        # (pinned by tests/test_shard.py), so the same trace compares.
+        pool = VariantPool(get_config(ARCH))
+        profiles = _fleet_profiles(scenario_name, num_standby, seed)
+        sim = ShardedSimulator(
+            lambda ps: ProfilingTable(pool, ps, seq_len=seq_len),
+            profiles, sc.arrivals, sc.faults,
+            cells=cells, strategy=cell_strategy, router=router,
+            policy=policy, seed=seed, noise_std=noise_std,
+            scenario=sc.name, horizon_s=sc.horizon_s,
+            admission=control in ("admission", "full"),
+            admission_rate=(admission_rate if admission_rate > 0
+                            else None),
+            autoscale=(control in ("autoscale", "full")
+                       and num_standby > 0),
+            max_batch=max_batch,
+            formation_window_s=formation_window_s,
+            rebalance_s=rebalance_s)
+    else:
+        gn = GatewayNode(table, SimBackend(table, noise_std=noise_std,
+                                           seed=seed), policy=policy,
+                         max_batch=max_batch)
+        admission = None
+        if control in ("admission", "full"):
+            admission = AdmissionController(
+                table, rate=admission_rate if admission_rate > 0 else None)
+        autoscaler = None
+        if control in ("autoscale", "full") and num_standby > 0:
+            standby_names = [n.name for n in table.nodes if not n.available]
+            autoscaler = Autoscaler(table, standby_names)
+        sim = OnlineSimulator(gn, sc.arrivals, sc.faults,
+                              scenario=sc.name, horizon_s=sc.horizon_s,
+                              admission=admission, autoscaler=autoscaler,
+                              formation_window_s=formation_window_s)
     report = sim.run()
     summary = report.summary()
     fallbacks = summary.get("plan_fallbacks", 0.0)
@@ -159,7 +190,13 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
                     "scale-up", "scale-down", "node_up")):
                 print(f"    [{policy}/{control}] {line}", file=sys.stderr)
     row = {"scenario": sc.name, "policy": policy, "control": control,
-           "seed": seed, "max_batch": max_batch, "seq_len": seq_len}
+           "seed": seed, "max_batch": max_batch, "seq_len": seq_len,
+           "cells": cells}
+    if cells > 0:
+        row["cell_strategy"] = cell_strategy
+        row["router"] = router
+        row["rebalances"] = len(sim.rebalances)
+        row["plans_made"] = sim.plans_made()
     row.update({k: float(v) for k, v in summary.items()})
     row["admission_counts"] = dict(report.admission_counts)
     row["scaling_actions"] = [
@@ -219,6 +256,22 @@ def main(argv=None) -> int:
                     help="token-bucket refill rate in req/s "
                          "(<=0 disables rate shaping; the SLO-feasibility "
                          "gate always runs)")
+    ap.add_argument("--cells", type=int, default=0,
+                    help="shard the control plane into this many cells "
+                         "(ShardedSimulator); 0 = the unsharded single "
+                         "gateway. cells=1 is byte-identical to 0 and "
+                         "exists to validate the sharding layer")
+    ap.add_argument("--cell-strategy", default="stripe",
+                    choices=("stripe", "by-class"),
+                    help="fleet partition strategy (repro.sched.shard)")
+    ap.add_argument("--router", default="least-backlog",
+                    choices=("least-backlog", "rendezvous"),
+                    help="root request-routing policy across cells")
+    ap.add_argument("--rebalance", type=float, default=0.0,
+                    help="root rebalance period in sim-seconds: move one "
+                         "pooled standby node from the calmest to the "
+                         "hottest cell when their normalized backlogs "
+                         "diverge (0 = off; multi-cell only)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--horizon", type=float, default=None,
                     help="arrival horizon in sim-seconds (default: 30, "
@@ -272,6 +325,10 @@ def main(argv=None) -> int:
             ap.error(f"unknown control mode {c!r}; have {CONTROL_MODES}")
     if args.horizon is not None and args.horizon <= 0:
         ap.error("--horizon must be > 0 sim-seconds")
+    if args.cells < 0:
+        ap.error("--cells must be >= 0 (0 = unsharded)")
+    if args.rebalance < 0:
+        ap.error("--rebalance must be >= 0 sim-seconds (0 = off)")
     try:
         batches = [int(b) for b in args.max_batch.split(",") if b.strip()]
     except ValueError:
@@ -327,7 +384,11 @@ def main(argv=None) -> int:
                                   verbose=args.verbose,
                                   max_batch=max_batch,
                                   seq_len=args.seq_len,
-                                  formation_window_s=args.formation_window)
+                                  formation_window_s=args.formation_window,
+                                  cells=args.cells,
+                                  cell_strategy=args.cell_strategy,
+                                  router=args.router,
+                                  rebalance_s=args.rebalance)
                     rows.append(row)
                     out = [
                         row["scenario"], row["policy"], row["control"],

@@ -79,6 +79,14 @@ class Autoscaler:
         self.warmup_s = warmup_s
         self.min_window = min_window
         self._window: Deque[bool] = collections.deque(maxlen=window)
+        # SLO samples observed since the last scaling action. A scaling
+        # action changes the very capacity the windowed samples measured,
+        # so the violation signal stays muted until ``min_window`` *fresh*
+        # post-action samples accrue — without this, the stale shed
+        # samples sitting in the deque re-trigger a second spawn the
+        # moment the cooldown expires even though the first spawn already
+        # fixed the backlog (scale-up flapping under low traffic).
+        self._fresh_samples = 0
         self._last_action_s = -float("inf")
         self._pending: Dict[str, float] = {}      # spawning: name -> ready_s
         self._spawned: List[str] = []             # active, LIFO retire order
@@ -92,11 +100,16 @@ class Autoscaler:
         request is a failed SLO, so sustained shedding must drive
         scale-up even while admission keeps the queues short."""
         self._window.append(slo_honoured)
+        self._fresh_samples += 1
 
     def violation_rate(self) -> float:
         """Windowed SLO-failure rate; 0 until ``min_window`` samples have
-        accrued so one early shed cannot trigger a spawn by itself."""
-        if len(self._window) < self.min_window:
+        accrued so one early shed cannot trigger a spawn by itself, and 0
+        again until ``min_window`` samples *after the last scaling
+        action* — samples taken before the action measured a capacity
+        that no longer exists."""
+        if (len(self._window) < self.min_window
+                or self._fresh_samples < self.min_window):
             return 0.0
         return sum(not ok for ok in self._window) / len(self._window)
 
@@ -137,6 +150,7 @@ class Autoscaler:
                         f"violation_rate={viol:.3f}"))
             self._pending[node] = action.ready_s
             self._last_action_s = now
+            self._fresh_samples = 0
             self.actions.append(action)
             return action
 
@@ -148,10 +162,37 @@ class Autoscaler:
                 reason=(f"backlog={mean_backlog:.3f}s "
                         f"violation_rate={viol:.3f}"))
             self._last_action_s = now
+            self._fresh_samples = 0
             self.actions.append(action)
             self.standby.append(node)             # back into the pool
             return action
         return None
+
+    # ---- cross-cell work stealing (sharded control plane) --------------
+    def release_standby(self) -> Optional[str]:
+        """Give up one *pooled* standby node so another cell's autoscaler
+        can adopt it (work stealing between cells). Only un-spawned,
+        un-pending pool members are transferable — a node mid-warm-up or
+        already serving belongs to this cell until it retires back into
+        the pool. Returns the released name, or None when the pool is
+        empty. Releases from the pool's tail: the head is this cell's
+        own next spawn candidate."""
+        if not self.standby:
+            return None
+        return self.standby.pop()
+
+    def adopt_standby(self, node: str):
+        """Adopt a standby node released by another cell's autoscaler.
+        The node must be profiled in this cell's table (sharded cell
+        tables carry every standby column precisely so adoption needs no
+        re-profiling) and not already owned here."""
+        names = {n.name for n in self.table.nodes}
+        assert node in names, (
+            f"cannot adopt {node}: not profiled in this cell's table")
+        assert node not in self.standby and node not in self._pending \
+            and node not in self._spawned, (
+                f"cannot adopt {node}: already owned by this autoscaler")
+        self.standby.append(node)
 
     def on_ready(self, node: str):
         """A spawned node finished warming up: bookkeeping only — it

@@ -9,6 +9,8 @@ Public surface:
                resolve_policy, registered_policies
   * policies — the five registered policies (uniform, uniform_apx,
                asymmetric, proportional, exact_oracle)
+  * shard    — sharded-control-plane cell logic: CellSpec,
+               partition_fleet, CellRouter, pick_rebalance
 
 The legacy free-function surface (``repro.core.dispatch.dispatch`` and
 the ``POLICIES`` dict) is a thin shim over this package. See README.md
@@ -20,6 +22,8 @@ from repro.sched.policies import (Asymmetric, ExactOracle, Proportional,
 from repro.sched.policy import (Policy, get_policy, register_policy,
                                 registered_policies, resolve_policy)
 from repro.sched.reference import ReferencePolicy
+from repro.sched.shard import (CellRouter, CellSpec, partition_fleet,
+                               pick_rebalance)
 from repro.sched.state import ClusterState, SnapshotCache
 
 __all__ = [
@@ -27,4 +31,5 @@ __all__ = [
     "register_policy", "registered_policies", "get_policy",
     "resolve_policy", "ReferencePolicy",
     "Uniform", "UniformApx", "Asymmetric", "Proportional", "ExactOracle",
+    "CellSpec", "CellRouter", "partition_fleet", "pick_rebalance",
 ]

@@ -36,11 +36,31 @@ def quantized_batch_split(state, avail_idx: np.ndarray,
     q = state.max_batch
     cols = avail_idx.tolist()
     level_l = np.asarray(levels).tolist()
-    base = [int(num_items * s) // q * q for s in shares.tolist()]
+    # Guard the fp->int quantization: a share vector is only *intended*
+    # to be a simplex point, but fp error (or an adversarial caller) can
+    # hand us negative entries or a sum above 1.0. Unguarded, a negative
+    # share yields a negative base count and an oversubscribed sum makes
+    # ``leftover`` negative — the greedy loop below then silently skips
+    # and the function returns counts that do not sum to ``num_items``.
+    clean = [s if s > 0.0 and np.isfinite(s) else 0.0
+             for s in shares.tolist()]
+    # cap each base at the largest engine-batch multiple <= num_items
+    # (not num_items itself): bases must stay q-multiples or the strip
+    # loop below would shave several of them into tail chunks
+    cap = num_items // q * q
+    base = [min(int(num_items * s) // q * q, cap) for s in clean]
     backlog = state.backlog_s
     names = state.names
     backlogs = [backlog.get(names[c], 0.0) for c in cols]
     leftover = num_items - sum(base)
+    while leftover < 0:
+        # quantized bases oversubscribed (shares summed above 1.0):
+        # strip whole engine batches from the largest share until the
+        # greedy placement below has a non-negative remainder to place
+        j = max(range(len(base)), key=base.__getitem__)
+        take = min(q, base[j], -leftover)
+        base[j] -= take
+        leftover += take
     while leftover > 0:
         chunk = min(q, leftover)
         best, best_t = 0, float("inf")

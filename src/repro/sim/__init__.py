@@ -1,30 +1,36 @@
 """Discrete-event online serving simulation (sim clock, arrivals, faults).
 
 Public surface:
-  * events      — SimClock, EventQueue, SimEvent
+  * events      — SimClock, EventQueue, SeqCounter, SimEvent
   * arrivals    — PoissonArrivals, DiurnalArrivals, BurstArrivals,
                   TraceArrivals, RequestSampler
   * simulator   — OnlineSimulator, TimedFault, RequestRecord, SimReport
+  * sharded     — ShardedSimulator (per-cell gateways behind a root
+                  router; ``cells=1`` is byte-identical to the unsharded
+                  OnlineSimulator)
   * scenarios   — Scenario, build_scenario, SCENARIOS + builders
 
 The closed-loop gateway controls (AdmissionController, Autoscaler) live in
 ``repro.control`` and plug into OnlineSimulator via its ``admission`` /
-``autoscaler`` constructor args.
+``autoscaler`` constructor args; the cell partition/router logic lives in
+``repro.sched.shard``.
 """
 from repro.sim.arrivals import (ArrivalProcess, BurstArrivals,
                                 DiurnalArrivals, PoissonArrivals,
                                 RequestSampler, TraceArrivals)
-from repro.sim.events import EventQueue, SimClock, SimEvent
+from repro.sim.events import EventQueue, SeqCounter, SimClock, SimEvent
 from repro.sim.scenarios import (FLEET_HORIZONS, FLEET_SCENARIOS,
                                  FLEET_SIZES, SCENARIOS, Scenario,
                                  build_scenario)
 from repro.sim.simulator import (OnlineSimulator, RequestRecord, SimReport,
                                  TimedFault)
+from repro.sim.sharded import ShardedSimulator    # noqa: E402  (needs simulator)
 
 __all__ = [
     "ArrivalProcess", "BurstArrivals", "DiurnalArrivals", "PoissonArrivals",
-    "RequestSampler", "TraceArrivals", "EventQueue", "SimClock", "SimEvent",
+    "RequestSampler", "TraceArrivals", "EventQueue", "SeqCounter",
+    "SimClock", "SimEvent",
     "SCENARIOS", "FLEET_SCENARIOS", "FLEET_SIZES", "FLEET_HORIZONS",
-    "Scenario", "build_scenario", "OnlineSimulator",
+    "Scenario", "build_scenario", "OnlineSimulator", "ShardedSimulator",
     "RequestRecord", "SimReport", "TimedFault",
 ]

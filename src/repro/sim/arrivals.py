@@ -42,6 +42,14 @@ class RequestSampler:
     # shed but never degrade them). 0 draws nothing from the RNG, so the
     # default keeps every pre-existing seeded trace bit-identical.
     strict_frac: float = 0.0
+    # scales the capacity the perf_req draw is calibrated against. The
+    # default sizes every request for the *whole* serving set — right for
+    # one gateway planning fleet-wide, infeasible under a sharded control
+    # plane where each request lands on one cell's slice. The fleet-1024+
+    # scenarios set this to ~cell_size/fleet_size so requests are sized
+    # for the group that actually serves them. 1.0 multiplies exactly
+    # (IEEE), keeping all pre-existing seeded traces bit-identical.
+    capacity_frac: float = 1.0
 
     def _perf_bounds(self):
         """(lo, hi) perf_req draw bounds, cached on (availability, table
@@ -58,8 +66,9 @@ class RequestSampler:
         # capacity of the cluster the request actually lands on
         cols = [j for j, n in enumerate(self.table.nodes) if n.available]
         cols = cols or list(range(self.table.num_nodes))
-        lo = self.table.perf[0, cols].sum()
-        cap = self.table.perf[-1, cols].min() * len(cols)
+        lo = self.table.perf[0, cols].sum() * self.capacity_frac
+        cap = self.table.perf[-1, cols].min() * len(cols) \
+            * self.capacity_frac
         hi = max(cap * self.perf_hi_frac, lo * self.perf_lo_frac * 1.01)
         self._bounds_cache = (key, lo, hi)
         return lo, hi

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,21 +31,52 @@ class SimEvent:
     payload: Dict[str, Any]
 
 
+class SeqCounter:
+    """Monotone event-sequence source. One counter per EventQueue by
+    default; the sharded control plane hands one *shared* counter to
+    every cell's queue so dynamic events across cells draw from a single
+    (time, seq) total order — with one cell that order is bit-identical
+    to a standalone queue's, which is what keeps ``cells=1`` runs
+    byte-identical to the unsharded simulator."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, start: int = 0):
+        self.value = start
+
+    def next(self) -> int:
+        v = self.value
+        self.value += 1
+        return v
+
+
 class EventQueue:
     """Min-heap of SimEvents keyed on (time, seq)."""
 
-    def __init__(self):
+    def __init__(self, counter: Optional[SeqCounter] = None):
         self._heap: list[Tuple[float, int, SimEvent]] = []
-        self._seq = 0
+        self._counter = counter if counter is not None else SeqCounter()
 
-    def push(self, time: float, kind: str, **payload: Any) -> SimEvent:
-        ev = SimEvent(time=time, seq=self._seq, kind=kind, payload=payload)
-        heapq.heappush(self._heap, (time, self._seq, ev))
-        self._seq += 1
+    def push(self, time: float, kind: str, _seq: Optional[int] = None,
+             **payload: Any) -> SimEvent:
+        """Schedule an event. ``_seq`` overrides the counter with a
+        pre-assigned sequence number — the sharded root router uses this
+        to give arrivals/faults the exact seq numbers the unsharded
+        constructor would have assigned, regardless of which cell's
+        queue they land in."""
+        seq = self._counter.next() if _seq is None else _seq
+        ev = SimEvent(time=time, seq=seq, kind=kind, payload=payload)
+        heapq.heappush(self._heap, (time, seq, ev))
         return ev
 
     def pop(self) -> SimEvent:
         return heapq.heappop(self._heap)[2]
+
+    def peek(self) -> SimEvent:
+        """The next event without removing it (raises IndexError when
+        empty) — the sharded root's merge loop reads every cell's head
+        to pick the global (time, seq) minimum."""
+        return self._heap[0][2]
 
     def __len__(self) -> int:
         return len(self._heap)

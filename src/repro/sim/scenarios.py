@@ -21,6 +21,13 @@ cluster actually being simulated. Builders:
                           every node, so fleet event counts scale ~linearly
                           with fleet size and want short horizons
                           (``FLEET_HORIZONS``).
+  * ``fleet-1024`` / ``fleet-4096`` — sharded-control-plane scale
+                          points: same churn-wave shape, but requests are
+                          sized for a 64-node cell (``capacity_frac``) so
+                          the trace stays feasible when each lands on one
+                          cell's slice of the fleet. fleet-4096 is beyond
+                          a single gateway's MAX_EVENTS budget and exists
+                          for ``cells >= 16`` runs.
 
 Use :func:`build_scenario` for name-based lookup (benchmarks/run_sim.py)
 — it resolves classic and fleet names — or call the builders directly
@@ -198,6 +205,7 @@ def trace(table: ProfilingTable, arrivals: Sequence[Arrival],
 
 def fleet(table: ProfilingTable, *, seed: int = 0, horizon_s: float = 6.0,
           load: float = 0.7, churn_frac: float = 0.05,
+          capacity_frac: float = 1.0,
           sampler: Optional[RequestSampler] = None,
           name: str = "fleet") -> Scenario:
     """Large-fleet control-plane stressor: steady Poisson at ``load`` x
@@ -206,8 +214,15 @@ def fleet(table: ProfilingTable, *, seed: int = 0, horizon_s: float = 6.0,
     rejoins at 2/3 — so snapshot/plan caches see availability churn, not
     just steady state. Built for ``synthetic_fleet`` tables but works on
     any; pair with short horizons (every request fans a share onto every
-    available node, so events ~= arrivals x fleet size)."""
-    sampler = sampler or RequestSampler(table)
+    available node, so events ~= arrivals x fleet size).
+
+    ``capacity_frac`` sizes each request's perf_req against that fraction
+    of the fleet's capacity (see ``RequestSampler.capacity_frac``): the
+    sharded fleet scenarios set it to ~cell_size/fleet_size so requests
+    stay feasible inside one cell's slice. Only the default sampler is
+    scaled — an explicit ``sampler`` keeps its own calibration."""
+    sampler = sampler or RequestSampler(table,
+                                        capacity_frac=capacity_frac)
     rate = _rate_for_load(table, sampler, load)
     active = [(j, n.name) for j, n in enumerate(table.nodes) if n.available]
     # churn the weakest level-0 columns: losing them stresses replanning
@@ -239,6 +254,30 @@ def fleet_256(table: ProfilingTable, *, seed: int = 0, **kwargs) -> Scenario:
     return fleet(table, seed=seed, name="fleet-256", **kwargs)
 
 
+def fleet_1024(table: ProfilingTable, *, seed: int = 0,
+               **kwargs) -> Scenario:
+    """Sharded-control-plane scale point: requests are sized for a
+    64-node cell (capacity_frac=1/16), so the same trace is feasible for
+    a single 1024-node gateway *and* for 16 cells of 64 — the bench's
+    cells=1 vs cells=16 comparison runs identical offered load. The
+    short default horizon keeps an unsharded run under the simulator's
+    MAX_EVENTS guard (events ~= arrivals x fleet size)."""
+    kwargs.setdefault("horizon_s", FLEET_HORIZONS["fleet-1024"])
+    kwargs.setdefault("capacity_frac", 1.0 / 16.0)
+    return fleet(table, seed=seed, name="fleet-1024", **kwargs)
+
+
+def fleet_4096(table: ProfilingTable, *, seed: int = 0,
+               **kwargs) -> Scenario:
+    """Beyond single-gateway reach: at 4096 nodes an unsharded run blows
+    MAX_EVENTS at any useful horizon — this scenario exists for the
+    sharded control plane (cells >= 16). Requests sized for 64-node
+    cells (capacity_frac=1/64)."""
+    kwargs.setdefault("horizon_s", FLEET_HORIZONS["fleet-4096"])
+    kwargs.setdefault("capacity_frac", 1.0 / 64.0)
+    return fleet(table, seed=seed, name="fleet-4096", **kwargs)
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "steady": steady,
     "diurnal": diurnal,
@@ -250,11 +289,15 @@ SCENARIOS: Dict[str, Callable[..., Scenario]] = {
 
 # fleet scenarios resolve through build_scenario but stay out of the
 # ``all`` sweep: their event counts scale with fleet size
-FLEET_SIZES: Dict[str, int] = {"fleet-64": 64, "fleet-256": 256}
-FLEET_HORIZONS: Dict[str, float] = {"fleet-64": 6.0, "fleet-256": 2.0}
+FLEET_SIZES: Dict[str, int] = {"fleet-64": 64, "fleet-256": 256,
+                               "fleet-1024": 1024, "fleet-4096": 4096}
+FLEET_HORIZONS: Dict[str, float] = {"fleet-64": 6.0, "fleet-256": 2.0,
+                                    "fleet-1024": 0.4, "fleet-4096": 0.05}
 FLEET_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "fleet-64": fleet_64,
     "fleet-256": fleet_256,
+    "fleet-1024": fleet_1024,
+    "fleet-4096": fleet_4096,
 }
 
 

@@ -361,7 +361,8 @@ class OnlineSimulator:
                  autoscaler: Optional[Autoscaler] = None,
                  legacy_control_plane: bool = False,
                  max_batch: Optional[int] = None,
-                 formation_window_s: float = 0.0):
+                 formation_window_s: float = 0.0,
+                 event_queue: Optional[EventQueue] = None):
         self.gn = gn
         self.backend = gn.backend
         self.admission = admission
@@ -392,7 +393,17 @@ class OnlineSimulator:
             # caller wired a different one in explicitly
             admission.policy = gn.policy_obj
         self.clock = SimClock()
-        self.events = EventQueue()
+        # the sharded control plane injects a queue wired to a *shared*
+        # seq counter so every cell draws dynamic seqs from one total
+        # order; standalone use gets a private counter (the pre-shard
+        # behaviour, bit-identical)
+        self.events = event_queue if event_queue is not None \
+            else EventQueue()
+        # settlement hook: called once per request when it reaches a
+        # terminal outcome (rejected at the gate, or finalized). The
+        # sharded root uses it to keep its per-cell outstanding-work
+        # routing counters current; None (the default) is a no-op.
+        self.on_settled: Optional[Callable[[RequestRecord], None]] = None
         self.nodes: Dict[str, NodeRuntime] = {
             n.name: NodeRuntime(n.name, self.batching)
             for n in gn.table.nodes}
@@ -429,9 +440,7 @@ class OnlineSimulator:
         t0 = time.perf_counter()
         n_events = 0
         while self.events:
-            ev = self.events.pop()
-            self.clock.advance_to(ev.time)
-            self._handle(ev)
+            self.process_next()
             n_events += 1
             if n_events > self.MAX_EVENTS:
                 raise RuntimeError("simulator exceeded MAX_EVENTS")
@@ -447,6 +456,15 @@ class OnlineSimulator:
                          end_s=self.clock.now,
                          n_events=n_events,
                          wall_s=time.perf_counter() - t0)
+
+    def process_next(self) -> SimEvent:
+        """Pop and handle the earliest scheduled event. ``run()`` is this
+        in a loop; the sharded root calls it directly so it can merge
+        many cells' queues into one global (time, seq) order."""
+        ev = self.events.pop()
+        self.clock.advance_to(ev.time)
+        self._handle(ev)
+        return ev
 
     def _handle(self, ev: SimEvent):
         now = self.clock.now
@@ -548,6 +566,8 @@ class OnlineSimulator:
             self._log(f"rid={rec.request.rid} REJECTED "
                       f"({decision.reason}, est_wait="
                       f"{decision.est_wait_s:.3f}s)")
+            if self.on_settled is not None:
+                self.on_settled(rec)
             return
         rec.rejected = False
         if decision.outcome == DEGRADE:
@@ -809,6 +829,8 @@ class OnlineSimulator:
                   f"latency={rec.latency_s:.3f}s "
                   f"wait={rec.queue_wait_s:.3f}s "
                   f"{'OK' if rec.meets_deadline else 'DEADLINE-MISS'}")
+        if self.on_settled is not None:
+            self.on_settled(rec)
 
     # ---- faults ------------------------------------------------------
     def _disconnect(self, node: str):

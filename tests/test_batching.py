@@ -189,6 +189,38 @@ def test_quantized_split_shape(pool):
             assert len(tails) <= 1, (max_batch, items, split)
 
 
+def test_quantized_split_survives_adversarial_shares(pool):
+    """fp-guard regression: share vectors are only *intended* simplex
+    points — fp error (or a buggy policy) can hand the split negative
+    entries, sums above 1.0, NaN or inf. The guarded split must still
+    conserve items with non-negative counts and at most one tail chunk;
+    unguarded, an oversubscribed sum drove ``leftover`` negative and the
+    function returned counts that did not sum to the request."""
+    table = _measured_table(pool, [100.0, 70.0, 40.0])
+    nan, inf = float("nan"), float("inf")
+    adversarial = [
+        [1.2, -0.3, 0.4],            # negative entry, sum > 1
+        [0.7, 0.7, 0.7],             # oversubscribed: strips whole batches
+        [nan, 0.5, 0.6],
+        [inf, 0.2, 0.1],
+        [-1.0, -1.0, -1.0],          # nothing placeable: greedy does it all
+        [0.0, 0.0, 0.0],
+        [2.0, 2.0, 2.0],
+    ]
+    for max_batch in (4, 32):
+        state = ClusterState.from_table(table, max_batch=max_batch)
+        idx = state.avail_idx
+        levels = np.zeros(len(idx), dtype=int)
+        for shares in adversarial:
+            for items in (1, 13, 64, 650):
+                split = quantized_batch_split(
+                    state, idx, levels, np.asarray(shares), items)
+                assert sum(split) == items, (shares, items, split)
+                assert all(s >= 0 for s in split), (shares, items, split)
+                tails = [s % max_batch for s in split if s % max_batch]
+                assert len(tails) <= 1, (shares, items, split)
+
+
 def test_unbatched_plan_unchanged_fields(pool):
     """max_batch=1 snapshots plan exactly as before the batch dimension
     existed: scalar pricing, no assumed_batch annotation."""

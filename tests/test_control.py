@@ -54,6 +54,52 @@ def test_token_bucket_refills_on_sim_clock():
     assert TokenBucket(rate=None).try_take(0.0)
 
 
+def test_token_bucket_first_use_after_idle_start():
+    """A bucket first touched at t0 > 0 holds at most ``burst`` tokens —
+    the lazy refill must not credit the whole idle [0, t0) stretch as
+    accrued budget (a trace whose first arrival is late would otherwise
+    blow straight through the rate limit)."""
+    b = TokenBucket(rate=1.0, burst=2.0)
+    assert b.peek(50.0) == pytest.approx(2.0)    # capped, not 50 tokens
+    assert b.try_take(50.0) and b.try_take(50.0)
+    assert not b.try_take(50.0)                  # burst spent
+    assert not b.try_take(50.5)                  # only 0.5 accrued
+    assert b.try_take(51.0)                      # 1 full token since 50.0
+
+
+def test_token_bucket_equal_timestamps_do_not_refill():
+    """Same-instant calls accrue nothing regardless of rate: refill only
+    happens when the sim clock actually advanced (now > last)."""
+    b = TokenBucket(rate=1000.0, burst=1.0)
+    assert b.try_take(7.0)
+    for _ in range(3):
+        assert not b.try_take(7.0)
+    assert b.try_take(7.01)                      # 10 tokens accrue, cap 1
+
+
+def test_rate_limit_on_replayed_trace_starts_at_burst(pool, tmp_path):
+    """End-to-end replay: a file-backed trace whose first arrival is at
+    t=50s meets a gate whose bucket was built at sim t=0. Only the burst
+    gets through the opening volley — pinning that the bucket cannot
+    bank the pre-trace idle stretch."""
+    table = _measured_table(pool, [200.0])
+    path = tmp_path / "late_trace.csv"
+    rows = ["arrival_s,num_items,perf_req,acc_req,rid"]
+    rows += [f"{50.0 + i * 0.001},10,50.0,0.0,{i}" for i in range(6)]
+    path.write_text("\n".join(rows) + "\n")
+    from repro.sim.arrivals import TraceArrivals
+    arrivals = TraceArrivals.from_file(str(path)).generate()
+    gn = GatewayNode(table, SimBackend(table), policy="proportional")
+    adm = AdmissionController(table, rate=1.0, burst=2.0)
+    rep = OnlineSimulator(gn, arrivals, (), admission=adm).run()
+    admitted = [r for r in rep.records if r.admitted]
+    shed = [r for r in rep.records if r.rejected]
+    assert len(admitted) == 2 and len(shed) == 4
+    assert all(r.reject_reason == "rate_limited" for r in shed)
+    assert rep.admission_counts[REJECT] == 4
+    assert all(r.done for r in admitted)
+
+
 def test_admission_rate_limit_uses_sim_clock(pool):
     table = _measured_table(pool, [100.0])
     adm = AdmissionController(table, rate=1.0, burst=1.0)
@@ -176,6 +222,67 @@ def test_autoscaler_violation_window_needs_min_samples(pool):
     for _ in range(7):
         asc.record_outcome(False)
     assert asc.violation_rate() == 1.0
+
+
+def test_autoscaler_no_flap_on_stale_violation_window(pool):
+    """Flap regression: the violation window is muted after *every*
+    scaling action until ``min_window`` fresh post-action samples accrue.
+    Before the fix, the shed samples that justified a spawn sat in the
+    deque and re-triggered a second spawn the moment the cooldown
+    expired — even though the first spawn had already fixed the backlog."""
+    table = _measured_table(pool, [100.0, 80.0, 80.0],
+                            standby=("n1", "n2"))
+    asc = Autoscaler(table, ["n1", "n2"], min_window=4, window=8,
+                     cooldown_s=1.0, warmup_s=0.5,
+                     scale_up_backlog_s=1.0, scale_down_backlog_s=0.1)
+    for _ in range(8):
+        asc.record_outcome(False)            # pre-spawn meltdown evidence
+    a = asc.evaluate(_state(table, now=0.0, backlogs={"n0": 0.5}))
+    assert a is not None and a.kind == "spawn" and a.node == "n1"
+    asc.on_ready("n1")
+    # cooldown expired, backlog healthy — the 8 shed samples are stale
+    # (they measured pre-spawn capacity), so no second spawn
+    assert asc.violation_rate() == 0.0
+    assert asc.evaluate(_state(table, now=2.0, backlogs={"n0": 0.5})) is None
+    # fresh post-spawn evidence that capacity is STILL short: the
+    # signal un-mutes and scaling resumes
+    for _ in range(4):
+        asc.record_outcome(False)
+    assert asc.violation_rate() == 1.0
+    b = asc.evaluate(_state(table, now=4.0, backlogs={"n0": 0.5}))
+    assert b is not None and b.kind == "spawn" and b.node == "n2"
+
+
+def test_autoscaler_retire_also_resets_violation_window(pool):
+    """The scale-down branch mutes the window too: samples recorded
+    against pre-retire capacity must not immediately re-spawn the node
+    that was just retired (retire/spawn ping-pong)."""
+    table = _measured_table(pool, [100.0, 80.0], standby=("n1",))
+    asc = Autoscaler(table, ["n1"], min_window=4, window=8,
+                     cooldown_s=1.0, warmup_s=0.5)
+    a = asc.evaluate(_state(table, now=0.0, backlogs={"n0": 5.0}))
+    assert a is not None and a.kind == "spawn"
+    asc.on_ready("n1")
+    for _ in range(8):
+        asc.record_outcome(True)             # healthy while scaled up
+    r = asc.evaluate(_state(table, now=2.0, backlogs={"n0": 0.0}))
+    assert r is not None and r.kind == "retire"
+    # two violations right after the retire: they are real, but 2 < 4
+    # fresh samples — the retire reset the counter, so the mixed window
+    # (2 False / 8) must not read as 0.25 and re-spawn what just left
+    asc.record_outcome(False)
+    asc.record_outcome(False)
+    assert asc.violation_rate() == 0.0
+    assert asc.evaluate(_state(table, now=4.0,
+                               backlogs={"n0": 0.5})) is None
+    # enough fresh post-retire evidence: the signal un-mutes and the
+    # node comes back
+    asc.record_outcome(False)
+    asc.record_outcome(False)
+    assert asc.violation_rate() == pytest.approx(0.5)
+    again = asc.evaluate(_state(table, now=6.0, backlogs={"n0": 0.5}))
+    assert again is not None and again.kind == "spawn" \
+        and again.node == "n1"
 
 
 def test_spawned_node_serves_after_warmup(pool):

@@ -102,3 +102,44 @@ def test_data_pipeline_deterministic_seekable(step):
     np.testing.assert_array_equal(a, b)
     assert a.shape == (3, 17)
     assert (a >= 0).all() and (a < 97).all()
+
+
+_share_elem = st.one_of(
+    st.floats(min_value=-2.0, max_value=2.0, allow_nan=False),
+    st.sampled_from([float("nan"), float("inf"), -float("inf")]))
+
+
+@st.composite
+def _split_cases(draw):
+    n = draw(st.integers(min_value=1, max_value=5))
+    caps = draw(st.lists(st.floats(min_value=10.0, max_value=5000.0,
+                                   allow_nan=False),
+                         min_size=n, max_size=n))
+    shares = draw(st.lists(_share_elem, min_size=n, max_size=n))
+    q = draw(st.sampled_from([1, 4, 8, 32]))
+    items = draw(st.integers(min_value=1, max_value=2000))
+    return caps, shares, q, items
+
+
+@given(case=_split_cases())
+@settings(max_examples=200, deadline=None)
+def test_quantized_split_conserves_items(case):
+    """Item conservation is unconditional: whatever share vector the
+    quantized split is handed — negative, oversubscribed, NaN, inf — the
+    returned counts are non-negative, sum to ``num_items``, and stay
+    engine-batch multiples up to one tail chunk."""
+    from repro.sched import ClusterState
+    from repro.sched.split import quantized_batch_split
+
+    caps, shares, q, items = case
+    table = _make_table(caps)
+    state = ClusterState.from_table(table, max_batch=q)
+    idx = state.avail_idx
+    split = quantized_batch_split(state, idx,
+                                  np.zeros(len(idx), dtype=int),
+                                  np.asarray(shares, dtype=np.float64),
+                                  items)
+    assert sum(split) == items
+    assert all(s >= 0 for s in split)
+    tails = [s % q for s in split if s % q]
+    assert len(tails) <= 1

@@ -335,7 +335,8 @@ def test_fleet_scenario_smoke(pool):
 
 
 def test_fleet_sizes_consistent():
-    assert FLEET_SIZES == {"fleet-64": 64, "fleet-256": 256}
+    assert FLEET_SIZES == {"fleet-64": 64, "fleet-256": 256,
+                           "fleet-1024": 1024, "fleet-4096": 4096}
     fleet = synthetic_fleet(256, seed=1, num_standby=2)
     assert len(fleet) == 258
     assert sum(not n.available for n in fleet) == 2

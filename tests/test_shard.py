@@ -1,0 +1,262 @@
+"""Sharded control-plane tests: fleet partitioning, the root router,
+work stealing, and the cells=1 byte-identity guarantee against the
+unsharded OnlineSimulator."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.cluster import SimBackend, synthetic_fleet
+from repro.core.profiling import NodeProfile, ProfilingTable
+from repro.core.requests import InferenceRequest
+from repro.core.resource_manager import GatewayNode
+from repro.core.variants import VariantPool
+from repro.sched.shard import (CellRouter, CellSpec, partition_fleet,
+                               pick_rebalance)
+from repro.sim import OnlineSimulator, ShardedSimulator
+from repro.sim.scenarios import fleet as fleet_scenario
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return VariantPool(get_config("phi4-mini-3.8b"))
+
+
+def _profiles(n=8, standby=0, seed=5):
+    return synthetic_fleet(n, seed=seed, num_standby=standby)
+
+
+def _req(rid, items=100):
+    return InferenceRequest(rid=rid, num_items=items, perf_req=50.0,
+                            acc_req=0.0)
+
+
+# ---- partitioning -----------------------------------------------------
+def test_partition_stripe_covers_fleet_in_order():
+    profiles = _profiles(10)
+    specs = partition_fleet(profiles, 3, "stripe")
+    assert [s.cell_id for s in specs] == [0, 1, 2]
+    names = [p.name for p in profiles]
+    # exact cover, no overlap
+    flat = [n for s in specs for n in s.nodes]
+    assert sorted(flat) == sorted(names)
+    # stripe: node j lands in cell j % 3, original order kept per cell
+    for c, spec in enumerate(specs):
+        assert list(spec.nodes) == names[c::3]
+    # one cell reproduces the fleet order byte-identically
+    solo, = partition_fleet(profiles, 1, "stripe")
+    assert list(solo.nodes) == names
+
+
+def test_partition_by_class_balances_capacity():
+    # skewed classes: one 16x node plus seven 1x nodes over 2 cells —
+    # stripe puts 16+1+1+1 vs 1+1+1+1; LPT isolates the heavy node
+    profiles = [NodeProfile("big", chips=16, capability=1.0)]
+    profiles += [NodeProfile(f"small-{j}", chips=1, capability=1.0)
+                 for j in range(7)]
+    def cap(spec):
+        by_name = {p.name: p for p in profiles}
+        return sum(by_name[n].chips * by_name[n].capability
+                   for n in spec.nodes)
+    stripe = partition_fleet(profiles, 2, "stripe")
+    lpt = partition_fleet(profiles, 2, "by-class")
+    stripe_gap = abs(cap(stripe[0]) - cap(stripe[1]))
+    lpt_gap = abs(cap(lpt[0]) - cap(lpt[1]))
+    assert lpt_gap < stripe_gap
+    assert {"big"} == set(lpt[0].nodes) or {"big"} == set(lpt[1].nodes)
+    # cover holds for LPT too
+    assert sorted(n for s in lpt for n in s.nodes) \
+        == sorted(p.name for p in profiles)
+
+
+def test_partition_standby_dealt_round_robin():
+    profiles = _profiles(6, standby=3)
+    for strategy in ("stripe", "by-class"):
+        specs = partition_fleet(profiles, 2, strategy)
+        standby = sorted(n for s in specs for n in s.standby)
+        assert standby == [p.name for p in profiles if not p.available]
+        # 3 standby over 2 cells: 2 + 1
+        assert sorted(len(s.standby) for s in specs) == [1, 2]
+        # standby nodes never appear as serving members
+        assert not (set(standby) & {n for s in specs for n in s.nodes})
+
+
+def test_partition_validation():
+    profiles = _profiles(4)
+    with pytest.raises(AssertionError):
+        partition_fleet(profiles, 5)          # more cells than nodes
+    with pytest.raises(AssertionError):
+        partition_fleet(profiles, 0)
+    with pytest.raises(AssertionError):
+        partition_fleet(profiles, 2, "hash")  # unknown strategy
+
+
+# ---- router -----------------------------------------------------------
+def test_router_rendezvous_deterministic_and_stable():
+    specs = [CellSpec(c, (f"n{c}",)) for c in range(4)]
+    r1 = CellRouter(specs, policy="rendezvous")
+    r2 = CellRouter(specs, policy="rendezvous")
+    picks = [r1.route(_req(rid)) for rid in range(200)]
+    assert picks == [r2.route(_req(rid)) for rid in range(200)]
+    # HRW spreads: every cell sees traffic
+    assert set(picks) == {0, 1, 2, 3}
+    # minimal disruption: dropping the last cell only remaps requests
+    # that lived there (the HRW property)
+    r3 = CellRouter(specs[:3], policy="rendezvous")
+    for rid, c in enumerate(picks):
+        if c < 3:
+            assert r3.route(_req(rid)) == c
+
+
+def test_router_least_backlog_tracks_outstanding():
+    specs = [CellSpec(0, ("a",)), CellSpec(1, ("b",))]
+    r = CellRouter(specs, policy="least-backlog", capacities=[1.0, 1.0])
+    assert r.route(_req(0, items=100)) == 0     # tie -> lowest id
+    assert r.route(_req(1, items=10)) == 1      # cell0 now loaded
+    assert r.route(_req(2, items=10)) == 1      # 100 vs 10 outstanding
+    assert r.outstanding == [100.0, 20.0]
+    r.settle(0, 100)
+    assert r.route(_req(3, items=10)) == 0      # settled -> empty again
+    r.settle(1, 10**6)                          # over-settle clamps at 0
+    assert r.outstanding[1] == 0.0
+    # capacity-normalized: equal outstanding items weigh 10x less on the
+    # 10x-capacity cell, so it keeps winning after both served one
+    r2 = CellRouter(specs, policy="least-backlog", capacities=[10.0, 1.0])
+    assert r2.route(_req(0, items=5)) == 0      # tie -> lowest id
+    assert r2.route(_req(1, items=5)) == 1      # 0.5s vs 0.0s backlog
+    assert r2.route(_req(2, items=5)) == 0      # 0.5s vs 5.0s
+    assert r2.route(_req(3, items=5)) == 0      # 1.0s vs 5.0s
+
+
+def test_pick_rebalance_threshold_and_determinism():
+    assert pick_rebalance([0.0]) is None                   # 1 cell: never
+    assert pick_rebalance([0.0, 0.5], min_gap=1.0) is None
+    assert pick_rebalance([0.0, 1.5], min_gap=1.0) == (0, 1)
+    assert pick_rebalance([3.0, 0.5, 9.0], min_gap=1.0) == (1, 2)
+    # ties break to the lowest cell id on both ends
+    assert pick_rebalance([0.0, 0.0, 5.0, 5.0], min_gap=1.0) == (0, 2)
+
+
+# ---- cells=1 byte-identity -------------------------------------------
+def _fleet_fixture(pool, n, standby, horizon, seed):
+    profiles = synthetic_fleet(n, seed=seed, num_standby=standby)
+
+    def factory(ps):
+        return ProfilingTable(pool, ps, seq_len=512)
+
+    sc = fleet_scenario(factory([dataclasses.replace(p) for p in profiles]),
+                        seed=seed, horizon_s=horizon)
+    return profiles, factory, sc
+
+
+def _run_unsharded(profiles, factory, sc):
+    table = factory([dataclasses.replace(p) for p in profiles])
+    gn = GatewayNode(table, SimBackend(table, seed=0),
+                     policy="proportional")
+    return OnlineSimulator(gn, sc.arrivals, sc.faults, scenario=sc.name,
+                           horizon_s=sc.horizon_s).run()
+
+
+def test_cells1_byte_identical_to_unsharded(pool):
+    """The tentpole guarantee: a 1-cell sharded run reproduces the
+    unsharded simulator exactly — event count, log text, summary, and
+    every per-request record field."""
+    profiles, factory, sc = _fleet_fixture(pool, 24, 0, 2.0, seed=11)
+    base = _run_unsharded(profiles, factory, sc)
+    sharded = ShardedSimulator(
+        factory, [dataclasses.replace(p) for p in profiles],
+        sc.arrivals, sc.faults, cells=1, scenario=sc.name,
+        horizon_s=sc.horizon_s, seed=0).run()
+    assert sharded.n_events == base.n_events
+    assert sharded.log == base.log
+    assert sharded.end_s == base.end_s
+    assert sharded.summary() == base.summary()
+    assert len(sharded.records) == len(base.records)
+    for a, b in zip(base.records, sharded.records):
+        assert (a.request.rid, a.arrival_s, a.dispatch_s, a.finish_s,
+                a.done, a.redistributed) \
+            == (b.request.rid, b.arrival_s, b.dispatch_s, b.finish_s,
+                b.done, b.redistributed)
+        if a.done:
+            assert a.result.per_node_time == b.result.per_node_time
+
+
+def test_multi_cell_serves_full_trace(pool):
+    """cells=4 sanity: every arrival is routed to exactly one cell, all
+    requests resolve, logs carry cell prefixes, and the offered load
+    matches the unsharded run."""
+    profiles, factory, sc = _fleet_fixture(pool, 24, 0, 2.0, seed=11)
+    sim = ShardedSimulator(
+        factory, [dataclasses.replace(p) for p in profiles],
+        sc.arrivals, sc.faults, cells=4, scenario=sc.name,
+        horizon_s=sc.horizon_s, seed=0)
+    rep = sim.run()
+    assert len(rep.records) == len(sc.arrivals)
+    assert set(sim.routed_cell) == {req.rid for _, req in sc.arrivals}
+    assert set(sim.routed_cell.values()) <= {0, 1, 2, 3}
+    assert len(set(sim.routed_cell.values())) > 1    # actually spread
+    assert all(rec.done or rec.rejected for rec in rep.records)
+    assert all(line.startswith("[cell") or "[root]" in line
+               for line in rep.log)
+    # outstanding drains once every routed request settles
+    assert all(o == 0.0 for o in sim.router.outstanding)
+    s = rep.summary()
+    assert s["offered"] == len(sc.arrivals)
+
+
+def test_sharded_rejects_malformed_traces(pool):
+    profiles, factory, sc = _fleet_fixture(pool, 8, 0, 0.5, seed=3)
+    r0 = InferenceRequest(rid=0, num_items=10, perf_req=50.0, acc_req=0.0,
+                          arrival_s=1.0)
+    r1 = InferenceRequest(rid=1, num_items=10, perf_req=50.0, acc_req=0.0,
+                          arrival_s=0.5)
+    with pytest.raises(AssertionError):   # not time-sorted
+        ShardedSimulator(factory, profiles, [(1.0, r0), (0.5, r1)])
+    from repro.sim.simulator import TimedFault
+    with pytest.raises(ValueError):       # fault on an unknown node
+        ShardedSimulator(factory, profiles, [],
+                         [TimedFault(0.1, "disconnect", "ghost")])
+
+
+# ---- work stealing ----------------------------------------------------
+def test_rebalance_moves_pooled_standby_between_cells(pool):
+    """Root-side work stealing: past the load-gap threshold, one pooled
+    standby node migrates from the calm cell's autoscaler to the hot
+    cell's, and the move is logged at the root."""
+    profiles, factory, _ = _fleet_fixture(pool, 6, 2, 0.5, seed=3)
+    sim = ShardedSimulator(factory, profiles, [], cells=2,
+                           autoscale=True, rebalance_s=0.5,
+                           steal_threshold_s=1.0)
+    asc0, asc1 = (c.autoscaler for c in sim.cells)
+    donor = list(asc0.standby)
+    assert len(donor) == 1 and len(asc1.standby) == 1
+    # forced imbalance: cell1 drowning, cell0 idle
+    sim.router.outstanding = [0.0, 10_000.0]
+    sim._do_rebalance(0.5)
+    assert asc0.standby == []
+    assert donor[0] in asc1.standby
+    assert sim.rebalances == [(0.5, donor[0], 0, 1)]
+    assert any("[root] rebalance" in line for line in sim._root_log)
+    # balanced loads: no further move (and no donor left anyway)
+    sim.router.outstanding = [0.0, 0.0]
+    sim._do_rebalance(1.0)
+    assert len(sim.rebalances) == 1
+
+
+def test_release_and_adopt_standby_guards(pool):
+    from repro.control.autoscaler import Autoscaler
+    caps = np.asarray([100.0, 80.0], dtype=np.float64)
+    speed = np.linspace(1.0, 2.1, len(pool))[:, None]
+    nodes = [NodeProfile("n0", chips=1),
+             NodeProfile("n1", chips=1, available=False)]
+    table = ProfilingTable(pool, nodes, measured=caps[None, :] * speed)
+    asc = Autoscaler(table, ["n1"])
+    assert asc.release_standby() == "n1"
+    assert asc.release_standby() is None          # pool empty
+    asc.adopt_standby("n1")
+    assert asc.standby == ["n1"]
+    with pytest.raises(AssertionError):
+        asc.adopt_standby("n1")                   # already owned
+    with pytest.raises(AssertionError):
+        asc.adopt_standby("ghost")                # not in this table

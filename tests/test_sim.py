@@ -181,3 +181,89 @@ def test_straggler_storm_slows_then_recovers(pool):
     assert rep.summary()["completed"] == rep.summary()["offered"]
     assert any(line for line in rep.log if "straggler node=" in line)
     assert any(line for line in rep.log if "straggler_clear" in line)
+
+
+# ---- autoscaler retire: graceful drain --------------------------------
+def test_retire_drains_queued_shares(pool):
+    """Scale-down is graceful: a node that leaves the serving set while
+    it still holds a queued share drains that share to completion — only
+    *new* plans exclude it."""
+    from repro.core.resource_manager import Event
+
+    table = _measured_table(pool, [100.0, 100.0])
+    r0 = InferenceRequest(rid=0, num_items=400, perf_req=150.0,
+                          acc_req=0.0, arrival_s=0.0)
+    r1 = InferenceRequest(rid=1, num_items=400, perf_req=80.0,
+                          acc_req=0.0, arrival_s=5.0)
+    gn = GatewayNode(table, SimBackend(table), policy="proportional")
+    sim = OnlineSimulator(gn, [(0.0, r0), (5.0, r1)], ())
+    gn.startup()
+    sim.process_next()                 # r0 arrival: shares on n0 AND n1
+    assert sim.records[0].pending_shares > 0
+    # retire n1 while its share is still queued/running
+    gn.handle(Event(kind="retire", node="n1", time=0.0))
+    assert not table.nodes[1].available
+    rep = sim.run()                    # drain the rest of the trace
+    recs = {rec.request.rid: rec for rec in rep.records}
+    assert recs[0].done and recs[1].done
+    # the retired node finished the work it already held...
+    assert "n1" in recs[0].result.per_node_time
+    # ...but the post-retire plan never touched it
+    assert "n1" not in recs[1].result.per_node_time
+    assert all(a.node != "n1" for a in recs[1].dispatch.assignments
+               if a.items)
+
+
+def test_retire_then_respawn_does_not_double_count_backlog(pool):
+    """Retire-then-respawn round trip: the drained share's backlog is
+    gone when the node rejoins — a request planned after the respawn
+    sees an idle cluster (no ghost queue seconds) and lands on both
+    nodes again."""
+    from repro.core.resource_manager import Event
+
+    table = _measured_table(pool, [100.0, 100.0])
+    r0 = InferenceRequest(rid=0, num_items=400, perf_req=150.0,
+                          acc_req=0.0, arrival_s=0.0)
+    r1 = InferenceRequest(rid=1, num_items=400, perf_req=150.0,
+                          acc_req=0.0, arrival_s=8.0)
+    gn = GatewayNode(table, SimBackend(table), policy="proportional")
+    sim = OnlineSimulator(gn, [(0.0, r0), (8.0, r1)], ())
+    gn.startup()
+    sim.process_next()                 # r0 dispatched onto n0 + n1
+    gn.handle(Event(kind="retire", node="n1", time=0.0))
+    # respawn (autoscaler scale-up path) before r1 arrives
+    sim.events.push(5.0, "node_up", node="n1")
+    rep = sim.run()
+    recs = {rec.request.rid: rec for rec in rep.records}
+    assert recs[0].done and recs[1].done
+    assert table.nodes[1].available
+    assert any("node_up node=n1" in line for line in rep.log)
+    # r1 plans onto the respawned node with a clean queue: no carried-over
+    # backlog from the share n1 drained in its previous life
+    assert "n1" in recs[1].result.per_node_time
+    assert recs[1].queue_wait_s == pytest.approx(0.0)
+    assert all(b == 0.0 for b in sim._backlogs(rep.end_s).values())
+
+
+def test_retire_mid_formation_batch_still_drains(pool):
+    """Batched runtime: a share parked in a formation window when its
+    node retires still launches when the window closes and completes —
+    retirement never strands mid-formation items."""
+    from repro.core.resource_manager import Event
+
+    table = _measured_table(pool, [100.0])
+    r0 = InferenceRequest(rid=0, num_items=4, perf_req=0.0,
+                          acc_req=0.0, arrival_s=0.0)
+    gn = GatewayNode(table, SimBackend(table), policy="uniform",
+                     max_batch=8)
+    sim = OnlineSimulator(gn, [(0.0, r0)], (), horizon_s=1.0,
+                          formation_window_s=0.05)
+    gn.startup()
+    sim.process_next()                 # arrival: share held for joiners
+    assert sim.records[0].pending_shares > 0
+    assert not sim.records[0].done
+    gn.handle(Event(kind="retire", node="n0", time=0.0))
+    rep = sim.run()
+    rec = rep.records[0]
+    assert rec.done and rec.finish_s >= 0.05
+    assert "n0" in rec.result.per_node_time
