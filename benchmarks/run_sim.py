@@ -33,9 +33,11 @@ matching size (short per-fleet default horizons; they are excluded from
 ``all`` because event counts scale with fleet size).
 
 ``--json`` additionally dumps every row (plus the admission outcome and
-scaling-action detail, per-run wall-clock, and simulator events/sec) as
-a JSON array — CI uploads this as the nightly bench artifact so the
-metric trajectory is diffable across commits. ``--bench-json`` (bare,
+scaling-action detail, per-run wall-clock, simulator events/sec, and —
+for tenant scenarios — the per-tenant breakdown) under a versioned
+``{"schema_version": ..., "rows": [...]}`` envelope — CI uploads this
+as the nightly bench artifact so the metric trajectory is diffable
+across commits. ``--bench-json`` (bare,
 or with an explicit path) also writes a compact ``BENCH_3.json``
 (goodput, p99, shed rate per scenario x policy x control cell, plus a
 ``wall_clock`` section with per-scenario totals and events/sec), by
@@ -56,6 +58,34 @@ window. ``--batch-bench-json`` writes the batching A/B trajectory
 (``BENCH_5.json``: goodput/p99/shed/plan-error per cell plus on/off
 goodput ratios). ``--scenario trace:<path>`` replays a CSV/JSONL
 serving log instead of a synthetic arrival process.
+
+Multi-tenant fairness: ``--scenario tenants`` expands to the tenant
+scenarios (noisy-neighbor / tenant-skew / flash-crowd-tenant; they stay
+out of ``all`` because their metrics only mean something next to the
+per-tenant breakdown). ``--fairshare`` picks the gateway fairness
+bundle — per-tenant admission token buckets (each tenant's
+``rate_limit`` from the scenario's TenantSpecs) plus a deficit-round-
+robin fair queue in front of the gate (weights from each spec's
+``fair_share``):
+
+  auto   on for tenant scenarios, off otherwise (the default)
+  on     force the bundle (tenant scenarios only)
+  off    tenant-blind gateway, byte-identical to the pre-tenancy path
+  both   sweep off then on — the fairness A/B (adds a CSV column)
+
+``--tenants`` prints the per-tenant breakdown (offered / admitted /
+shed / admitted-violation rate / service ratio / p99) to stderr under
+each row. ``--tenant-bench-json`` writes the fairness trajectory
+(``BENCH_7.json``); its headline contract is that with the bundle on,
+one abusive tenant cannot raise the victims' admitted-violation rate
+above the anchored epsilon. ``--check-tenants`` gates a fresh
+``--fairshare both`` sweep against that committed anchor (victims'
+admitted-violation rate <= epsilon, Jain within 10% of the anchor's
+fs-on value) and exits non-zero on regression.
+
+  PYTHONPATH=src python benchmarks/run_sim.py --scenario tenants \
+      --policies proportional --control full --fairshare both \
+      --horizon 20 --tenants --tenant-bench-json
 """
 from __future__ import annotations
 
@@ -72,7 +102,8 @@ except ModuleNotFoundError:     # run from a checkout without PYTHONPATH=src
         os.path.dirname(os.path.abspath(__file__)), os.pardir, "src"))
 
 from repro.configs import get_config
-from repro.control import AdmissionController, Autoscaler
+from repro.control import (AdmissionController, Autoscaler,
+                           FairShareScheduler)
 from repro.core.cluster import (STANDBY_NODES, SimBackend, cluster_nodes,
                                 synthetic_fleet)
 from repro.core.profiling import ProfilingTable
@@ -81,15 +112,27 @@ from repro.core.variants import VariantPool
 from repro.sched import registered_policies
 from repro.sched.policy import REFERENCE_PREFIX
 from repro.sim import (FLEET_HORIZONS, FLEET_SCENARIOS, FLEET_SIZES,
-                       SCENARIOS, OnlineSimulator, ShardedSimulator,
-                       build_scenario)
+                       SCENARIOS, TENANT_SCENARIOS, OnlineSimulator,
+                       ShardedSimulator, build_scenario)
 from repro.sim.scenarios import TRACE_PREFIX
 
 ARCH = "phi4-mini-3.8b"
 CONTROL_MODES = ("none", "admission", "autoscale", "full")
+FAIRSHARE_MODES = ("auto", "on", "off", "both")
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_COMPACT = os.path.join(REPO_ROOT, "BENCH_3.json")
 BENCH_BATCH = os.path.join(REPO_ROOT, "BENCH_5.json")
+BENCH_TENANT = os.path.join(REPO_ROOT, "BENCH_7.json")
+# version stamp on every JSON artifact this tool writes (--json,
+# --bench-json, --batch-bench-json, --tenant-bench-json) so downstream
+# diffs/gates can tell a shape change from a metric change
+SCHEMA_VERSION = 1
+# fair-queue outstanding cap for the --fairshare bundle: one max-size
+# request (item_choices tops out at 650) of in-flight work per tenant
+# beyond its water-filled share. The DRR quantum alone orders release;
+# the cap is what keeps a flooding tenant from parking the whole gate
+# budget in its own queue between drains.
+FAIR_OUTSTANDING_ITEMS = 650
 # the classic sweep stays the paper's five policies so the committed
 # BENCH_3.json cells and the nightly CSV keep their shape; new registry
 # entries (accuracy_edf, ...) run when named via --policies
@@ -132,11 +175,23 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
             seq_len: int = 512, formation_window_s: float = 0.0,
             cells: int = 0, cell_strategy: str = "stripe",
             router: str = "least-backlog",
-            rebalance_s: float = 0.0) -> dict:
+            rebalance_s: float = 0.0, fair: bool = False,
+            tenant_batch_cap: int = 0) -> dict:
     t_wall = time.perf_counter()
     table = _fresh_table(scenario_name, num_standby, seed, seq_len=seq_len)
     sc = build_scenario(scenario_name, table, seed=seed,
                         horizon_s=horizon_s)
+    fs_weights = tenant_rates = None
+    if fair:
+        assert sc.tenants, (
+            f"--fairshare needs a tenant scenario, got {scenario_name!r}")
+        # the fairness bundle is declared by the scenario itself: DRR
+        # weights from each tenant's fair_share entitlement, per-tenant
+        # admission buckets from each tenant's rate_limit (the capacity
+        # lever — DRR ordering alone cannot reallocate node backlog)
+        fs_weights = {t.name: t.fair_share for t in sc.tenants}
+        tenant_rates = {t.name: t.rate_limit for t in sc.tenants
+                        if t.rate_limit is not None} or None
     if cells > 0:
         # sharded control plane: per-cell gateway stacks behind a root
         # router. cells=1 is byte-identical to the unsharded path below
@@ -152,10 +207,14 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
             admission=control in ("admission", "full"),
             admission_rate=(admission_rate if admission_rate > 0
                             else None),
+            admission_tenant_rates=(tenant_rates
+                                    if control in ("admission", "full")
+                                    else None),
             autoscale=(control in ("autoscale", "full")
                        and num_standby > 0),
             max_batch=max_batch,
             formation_window_s=formation_window_s,
+            fairshare=fair, fairshare_weights=fs_weights,
             rebalance_s=rebalance_s)
     else:
         gn = GatewayNode(table, SimBackend(table, noise_std=noise_std,
@@ -164,14 +223,21 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
         admission = None
         if control in ("admission", "full"):
             admission = AdmissionController(
-                table, rate=admission_rate if admission_rate > 0 else None)
+                table, rate=admission_rate if admission_rate > 0 else None,
+                tenant_rates=tenant_rates)
         autoscaler = None
         if control in ("autoscale", "full") and num_standby > 0:
             standby_names = [n.name for n in table.nodes if not n.available]
             autoscaler = Autoscaler(table, standby_names)
+        fairshare = None
+        if fair:
+            fairshare = FairShareScheduler(
+                fs_weights, max_outstanding_items=FAIR_OUTSTANDING_ITEMS)
         sim = OnlineSimulator(gn, sc.arrivals, sc.faults,
                               scenario=sc.name, horizon_s=sc.horizon_s,
                               admission=admission, autoscaler=autoscaler,
+                              fairshare=fairshare,
+                              tenant_batch_cap=tenant_batch_cap,
                               formation_window_s=formation_window_s)
     report = sim.run()
     summary = report.summary()
@@ -191,7 +257,14 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
                 print(f"    [{policy}/{control}] {line}", file=sys.stderr)
     row = {"scenario": sc.name, "policy": policy, "control": control,
            "seed": seed, "max_batch": max_batch, "seq_len": seq_len,
-           "cells": cells}
+           "cells": cells, "fairshare": bool(fair)}
+    if sc.tenants:
+        # per-tenant breakdown + who the scenario marks abusive (the
+        # stack never reads the flag; the fairness gate's victim set is
+        # everyone else)
+        row["tenants"] = report.tenant_summary()
+        row["abusive_tenants"] = sorted(
+            t.name for t in sc.tenants if t.abusive)
     if cells > 0:
         row["cell_strategy"] = cell_strategy
         row["router"] = router
@@ -212,14 +285,43 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
     return row
 
 
+def _fair_modes(scenario_name: str, mode: str):
+    """Fairshare settings to sweep for one scenario: ``auto`` turns the
+    bundle on exactly for scenarios that declare tenants, ``both`` is
+    the off-then-on A/B (validated to run over tenant scenarios only)."""
+    if mode == "off":
+        return [False]
+    if mode == "auto":
+        return [True] if scenario_name in TENANT_SCENARIOS else [False]
+    return [False, True] if mode == "both" else [True]
+
+
+def _print_tenants(row):
+    fs = "on" if row["fairshare"] else "off"
+    for name in sorted(row["tenants"]):
+        m = row["tenants"][name]
+        tag = (" (abusive)" if name in row.get("abusive_tenants", ())
+               else "")
+        print(f"    [{row['policy']}/{row['control']}/fs-{fs}] "
+              f"tenant={name}{tag} offered={m['offered']:.0f} "
+              f"admitted={m['admitted']:.0f} shed={m['shed_rate']:.3f} "
+              f"viol={m['admitted_violation_rate']:.3f} "
+              f"sr={m['service_ratio']:.3f} "
+              f"p99={m['p99_latency_s']:.4f}s "
+              f"goodput={m['goodput_rps']:.2f}", file=sys.stderr)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scenario", default="steady",
                     help=f"one of {sorted(SCENARIOS)}, a fleet scenario "
-                         f"({sorted(FLEET_SCENARIOS)}), or 'all' (the "
-                         "classic grid; fleet scenarios run only when "
-                         "named explicitly — their event counts scale "
-                         "with fleet size)")
+                         f"({sorted(FLEET_SCENARIOS)}), a tenant "
+                         f"scenario ({sorted(TENANT_SCENARIOS)}), "
+                         "'tenants' (all tenant scenarios), or 'all' "
+                         "(the classic grid; fleet and tenant scenarios "
+                         "run only when named — fleet event counts "
+                         "scale with fleet size, tenant metrics only "
+                         "mean something with the per-tenant breakdown)")
     policy_names = registered_policies()
     ap.add_argument("--policies", default=",".join(SWEEP_POLICIES),
                     help="comma-separated subset of "
@@ -249,6 +351,36 @@ def main(argv=None) -> int:
     ap.add_argument("--control", default="none,full",
                     help="comma-separated subset of "
                          f"{CONTROL_MODES} to sweep")
+    ap.add_argument("--fairshare", default="auto",
+                    choices=FAIRSHARE_MODES,
+                    help="multi-tenant fairness bundle (per-tenant "
+                         "admission buckets + DRR fair queue): auto = on "
+                         "for tenant scenarios / off otherwise, both = "
+                         "the off-then-on A/B sweep (tenant scenarios "
+                         "only)")
+    ap.add_argument("--tenants", action="store_true",
+                    help="print the per-tenant breakdown (offered / "
+                         "admitted / shed / admitted-violation rate / "
+                         "service ratio / p99) to stderr under each row")
+    ap.add_argument("--tenant-batch-cap", type=int, default=0,
+                    help="max items one tenant may claim in a formed "
+                         "engine batch before the work-conserving fill "
+                         "(0 = tenant-blind formation; unsharded path "
+                         "only)")
+    ap.add_argument("--tenant-bench-json", nargs="?", const=BENCH_TENANT,
+                    default="",
+                    help="write the compact tenant-fairness trajectory "
+                         "from a --fairshare both sweep (per-cell "
+                         "goodput/p99/shed/Jain + victims' admitted-"
+                         "violation rate and service ratio; default "
+                         "path: BENCH_7.json at the repo root)")
+    ap.add_argument("--check-tenants", nargs="?", const=BENCH_TENANT,
+                    default="",
+                    help="gate this sweep's fs-on cells against a "
+                         "committed tenant-fairness anchor (victims' "
+                         "admitted-violation rate <= the anchored "
+                         "epsilon, Jain within 10%% of the anchor); "
+                         "exits 1 on regression")
     ap.add_argument("--standby", type=int, default=2,
                     help="standby nodes available to the autoscaler "
                          f"(0..{len(STANDBY_NODES)})")
@@ -295,17 +427,21 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     scenario_names = (sorted(SCENARIOS) if args.scenario == "all"
+                      else sorted(TENANT_SCENARIOS)
+                      if args.scenario == "tenants"
                       else [args.scenario])
     for s in scenario_names:
         if s.startswith(TRACE_PREFIX):
             trace_path = s[len(TRACE_PREFIX):]
             if not os.path.exists(trace_path):
                 ap.error(f"trace file not found: {trace_path!r}")
-        elif s not in SCENARIOS and s not in FLEET_SCENARIOS:
+        elif (s not in SCENARIOS and s not in FLEET_SCENARIOS
+              and s not in TENANT_SCENARIOS):
             ap.error(f"unknown scenario {s!r}; have {sorted(SCENARIOS)}, "
                      f"{sorted(FLEET_SCENARIOS)}, "
+                     f"{sorted(TENANT_SCENARIOS)}, "
                      f"'{TRACE_PREFIX}<path>' (serving-log replay), "
-                     "or 'all'")
+                     "'tenants', or 'all'")
     policies = [p.strip() for p in args.policies.split(",") if p.strip()]
     if not policies:
         ap.error("--policies must name at least one policy "
@@ -339,6 +475,29 @@ def main(argv=None) -> int:
         ap.error("--seq-len must be >= 1")
     if args.formation_window < 0:
         ap.error("--formation-window must be >= 0")
+    non_tenant = [s for s in scenario_names if s not in TENANT_SCENARIOS]
+    if args.fairshare in ("on", "both") and non_tenant:
+        ap.error(f"--fairshare {args.fairshare} needs tenant scenarios "
+                 "(the bundle's weights and rate limits come from the "
+                 f"scenario's TenantSpecs); {non_tenant} declare none. "
+                 "Use --scenario tenants or a name from "
+                 f"{sorted(TENANT_SCENARIOS)}")
+    if args.tenant_bench_json and (non_tenant or args.fairshare != "both"):
+        # the fairness artifact is an A/B: every cell needs its fs-off
+        # twin or the containment story has no baseline
+        ap.error("--tenant-bench-json needs --fairshare both over "
+                 "tenant scenarios only (e.g. --scenario tenants "
+                 "--fairshare both)")
+    if args.check_tenants and (
+            non_tenant or args.fairshare not in ("auto", "on", "both")):
+        ap.error("--check-tenants gates fs-on cells: run it over tenant "
+                 "scenarios with --fairshare auto, on, or both")
+    if args.tenant_batch_cap < 0:
+        ap.error("--tenant-batch-cap must be >= 0 (0 = tenant-blind)")
+    if args.tenant_batch_cap > 0 and args.cells > 0:
+        ap.error("--tenant-batch-cap only plumbs into the unsharded "
+                 "path (--cells 0); per-cell batch formation stays "
+                 "tenant-blind")
     fleet_only = all(s in FLEET_SCENARIOS for s in scenario_names)
     if args.standby < 0:
         ap.error("--standby must be >= 0")
@@ -364,6 +523,12 @@ def main(argv=None) -> int:
     batch_sweep = batches != [1]
     if batch_sweep:
         cols = cols + ("max_batch",)
+    # ... and a sweep that ever runs the fairness bundle appends the
+    # fairshare column; pure fs-off sweeps keep the classic shape
+    fair_sweep = any(True in _fair_modes(s, args.fairshare)
+                     for s in scenario_names)
+    if fair_sweep:
+        cols = cols + ("fairshare",)
     print(",".join(cols))
     rows = []
     for sname in scenario_names:
@@ -375,7 +540,9 @@ def main(argv=None) -> int:
                        else FLEET_HORIZONS.get(sname, 30.0))
         for policy in policies:
             for control in controls:
-                for max_batch in batches:
+                for max_batch, fair in (
+                        (b, f) for b in batches
+                        for f in _fair_modes(sname, args.fairshare)):
                     row = run_one(sname, policy, control, seed=args.seed,
                                   horizon_s=horizon,
                                   noise_std=args.noise,
@@ -388,7 +555,9 @@ def main(argv=None) -> int:
                                   cells=args.cells,
                                   cell_strategy=args.cell_strategy,
                                   router=args.router,
-                                  rebalance_s=args.rebalance)
+                                  rebalance_s=args.rebalance,
+                                  fair=fair,
+                                  tenant_batch_cap=args.tenant_batch_cap)
                     rows.append(row)
                     out = [
                         row["scenario"], row["policy"], row["control"],
@@ -407,10 +576,15 @@ def main(argv=None) -> int:
                     ]
                     if batch_sweep:
                         out.append(f"{row['max_batch']:d}")
+                    if fair_sweep:
+                        out.append("on" if row["fairshare"] else "off")
                     print(",".join(out))
+                    if args.tenants and "tenants" in row:
+                        _print_tenants(row)
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=2, sort_keys=True)
+            json.dump({"schema_version": SCHEMA_VERSION, "rows": rows},
+                      f, indent=2, sort_keys=True)
         print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
     if args.bench_json:
         if batch_sweep:
@@ -427,7 +601,123 @@ def main(argv=None) -> int:
                      "--max-batch 1,32), or the A/B ratios would be "
                      "empty")
         write_batch_bench(rows, args, batches, path=args.batch_bench_json)
+    if args.tenant_bench_json:
+        write_tenant_bench(rows, args, path=args.tenant_bench_json)
+    if args.check_tenants:
+        failures = check_tenant_fairness(rows, args.check_tenants)
+        if failures:
+            for msg in failures:
+                print(f"FAIL {msg}", file=sys.stderr)
+            return 1
+        print(f"tenant fairness gate OK against {args.check_tenants}",
+              file=sys.stderr)
     return 0
+
+
+def _tenant_cell(row) -> dict:
+    """One fairness cell: whole-run serving metrics plus the victims'
+    (non-abusive tenants') worst-case view — the numbers the fairness
+    contract is written against. Jain is over per-tenant service ratios,
+    so it *drops* when containment works (the abuser's ratio collapses
+    to its slice); that is why the gate compares fs-on against the
+    anchored fs-on value rather than against the fs-off twin."""
+    victims = [t for t in row["tenants"]
+               if t not in row.get("abusive_tenants", ())]
+    assert victims, "tenant scenario with no non-abusive tenant"
+    cell = {
+        "goodput_rps": round(row["goodput_rps"], 3),
+        "p99_latency_s": round(row["p99_latency_s"], 5),
+        "shed_rate": round(row["shed_rate"], 4),
+        "jain": round(row["fairness_jain"], 4),
+        "victim_violation_rate": round(
+            max(row["tenants"][t]["admitted_violation_rate"]
+                for t in victims), 4),
+        "victim_service_ratio": round(
+            min(row["tenants"][t]["service_ratio"] for t in victims), 4),
+    }
+    abusers = row.get("abusive_tenants") or []
+    if abusers:
+        cell["abuser_service_ratio"] = round(
+            max(row["tenants"][t]["service_ratio"] for t in abusers), 4)
+    return cell
+
+
+def write_tenant_bench(rows, args, path: str = BENCH_TENANT):
+    """Compact tenant-fairness artifact (``BENCH_7.json``): one cell per
+    scenario x policy x control x fairshare from a ``--fairshare both``
+    sweep. Every fs-on cell carries its ``epsilon`` — the ceiling on the
+    victims' admitted-violation rate that ``--check-tenants`` (and the
+    nightly) enforce; the committed copy anchors it at the measured
+    value plus a small margin, so the headline contract is literal: one
+    abusive tenant cannot push the victims' admitted-violation rate
+    above epsilon while the fairness bundle is on."""
+    cells = {}
+    for r in rows:
+        if "tenants" not in r:
+            continue
+        fs = "fs-on" if r["fairshare"] else "fs-off"
+        cell = _tenant_cell(r)
+        if r["fairshare"]:
+            cell["epsilon"] = max(
+                0.02, round(cell["victim_violation_rate"] + 0.01, 4))
+        cells[f"{r['scenario']}/{r['policy']}/{r['control']}/{fs}"] = cell
+    out = {
+        "bench": "run_sim_tenant_fairness",
+        "schema_version": SCHEMA_VERSION,
+        "arch": ARCH,
+        "seed": args.seed,
+        "horizon_s": args.horizon,
+        "fair_outstanding_items": FAIR_OUTSTANDING_ITEMS,
+        "headline": "with the fairshare bundle on, an abusive tenant "
+                    "cannot raise the victims' admitted-violation rate "
+                    "above the cell's epsilon",
+        "cells": cells,
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(cells)} tenant-fairness cells to {path}",
+          file=sys.stderr)
+
+
+def check_tenant_fairness(rows, anchor_path: str,
+                          jain_tolerance: float = 0.10) -> list:
+    """Gate a fresh sweep's fs-on cells against a committed
+    ``BENCH_7.json``: victims' admitted-violation rate must stay within
+    the anchored epsilon and Jain within ``jain_tolerance`` of the
+    anchored fs-on value. Returns failure messages (empty = pass);
+    anchor cells the sweep did not reproduce are skipped, but zero
+    overlap is itself a failure (a mis-scoped sweep must not pass)."""
+    try:
+        with open(anchor_path) as f:
+            anchor = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"cannot read tenant-fairness anchor {anchor_path}: {e}"]
+    fresh = {
+        (f"{r['scenario']}/{r['policy']}/{r['control']}/fs-on"):
+            _tenant_cell(r)
+        for r in rows if "tenants" in r and r["fairshare"]}
+    failures, checked = [], 0
+    for key, cell in sorted(anchor.get("cells", {}).items()):
+        if not key.endswith("/fs-on") or key not in fresh:
+            continue
+        checked += 1
+        got = fresh[key]
+        eps = cell.get("epsilon", 0.02)
+        if got["victim_violation_rate"] > eps + 1e-9:
+            failures.append(
+                f"{key}: victims' admitted-violation rate "
+                f"{got['victim_violation_rate']:.4f} > epsilon {eps}")
+        floor = (1.0 - jain_tolerance) * cell["jain"]
+        if got["jain"] < floor - 1e-9:
+            failures.append(
+                f"{key}: Jain {got['jain']:.4f} < floor {floor:.4f} "
+                f"(anchor {cell['jain']:.4f} - {jain_tolerance:.0%})")
+    if not checked:
+        failures.append(
+            f"no fs-on cells overlap between this sweep and "
+            f"{anchor_path} — gate checked nothing")
+    return failures
 
 
 def write_batch_bench(rows, args, batches, path: str = BENCH_BATCH):
@@ -463,6 +753,7 @@ def write_batch_bench(rows, args, batches, path: str = BENCH_BATCH):
             ab[key] = round(r["goodput_rps"] / off["goodput_rps"], 3)
     out = {
         "bench": "run_sim_batching_ab",
+        "schema_version": SCHEMA_VERSION,
         "arch": ARCH,
         "seed": args.seed,
         "seq_len": args.seq_len,
@@ -501,6 +792,7 @@ def write_bench_compact(rows, args, path: str = BENCH_COMPACT):
     total_sim_wall = sum(r["sim_wall_s"] for r in rows)
     out = {
         "bench": "run_sim",
+        "schema_version": SCHEMA_VERSION,
         "arch": ARCH,
         "seed": args.seed,
         "horizon_s": args.horizon if args.horizon is not None else 30.0,

@@ -23,6 +23,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import shlex
 import sys
 from pathlib import Path
 
@@ -145,6 +146,12 @@ def main(argv=None) -> int:
               "entry deliberately:", file=sys.stderr)
         for n in gone_dark:
             print(f"  SKIPPED  {n}", file=sys.stderr)
+    if not ok:
+        # the exact suite this guard ran, ready to paste — a bare
+        # mismatch list otherwise makes local repro a guessing game
+        print("\n[baseline-guard] reproduce locally with:\n"
+              f"  PYTHONPATH=src python -m pytest "
+              f"{shlex.join(pytest_args)}", file=sys.stderr)
     if ok:
         print("[baseline-guard] OK: failures match the known-failure "
               "baseline")

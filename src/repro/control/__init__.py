@@ -3,6 +3,7 @@
 Public surface:
   * admission   — TokenBucket, AdmissionController, AdmissionDecision
   * autoscaler  — Autoscaler, ScalingAction
+  * fairshare   — FairShareScheduler, weighted_max_min
 
 The simulator (`repro.sim.simulator.OnlineSimulator`) consumes both: the
 AdmissionController gates every arrival (reject / degrade / admit) against
@@ -13,8 +14,10 @@ deadline-violation signals with cooldown + warm-up dynamics.
 from repro.control.admission import (AdmissionController, AdmissionDecision,
                                      TokenBucket)
 from repro.control.autoscaler import Autoscaler, ScalingAction
+from repro.control.fairshare import FairShareScheduler, weighted_max_min
 
 __all__ = [
     "AdmissionController", "AdmissionDecision", "TokenBucket",
     "Autoscaler", "ScalingAction",
+    "FairShareScheduler", "weighted_max_min",
 ]

@@ -113,7 +113,10 @@ class AdmissionController:
     def __init__(self, table: ProfilingTable, *,
                  policy: Union[str, Policy, None] = None,
                  rate: Optional[float] = None, burst: float = 8.0,
-                 degrade: bool = True, feasibility_margin: float = 0.02):
+                 degrade: bool = True, feasibility_margin: float = 0.02,
+                 tenant_rate: Optional[float] = None,
+                 tenant_burst: float = 8.0,
+                 tenant_rates: Optional[Dict[str, float]] = None):
         # ``table`` is accepted for constructor compatibility only: since
         # the plan-aware rewrite the gate reads capacity/accuracies/
         # backlogs exclusively from the ClusterState snapshot, never from
@@ -124,12 +127,33 @@ class AdmissionController:
         self.bucket = TokenBucket(rate, burst)
         self.degrade = degrade
         self.feasibility_margin = feasibility_margin
+        # multi-tenant shaping: ``tenant_rates`` pins per-tenant rates by
+        # name; ``tenant_rate`` is the default for tenants not listed. A
+        # tenant whose resolved rate is None gets no bucket at all, so
+        # single-tenant runs never even allocate one.
+        self.tenant_rate = tenant_rate
+        self.tenant_burst = float(tenant_burst)
+        self.tenant_rates: Dict[str, float] = dict(tenant_rates or {})
+        self.tenant_buckets: Dict[str, TokenBucket] = {}
         self.counts: Dict[str, int] = {ADMIT: 0, DEGRADE: 0, REJECT: 0}
 
     def _planner(self) -> Policy:
         if self.policy is None:
             self.policy = resolve_policy("proportional")
         return self.policy
+
+    def _tenant_bucket(self, tenant: str) -> Optional[TokenBucket]:
+        """Lazily build the tenant's bucket; None when that tenant is
+        unshaped. Buckets are strictly per-name — draining one tenant's
+        tokens can never touch another's."""
+        bucket = self.tenant_buckets.get(tenant)
+        if bucket is None:
+            rate = self.tenant_rates.get(tenant, self.tenant_rate)
+            if rate is None:
+                return None
+            bucket = TokenBucket(rate, self.tenant_burst)
+            self.tenant_buckets[tenant] = bucket
+        return bucket
 
     # ---- the gate -----------------------------------------------------
     def decide(self, request: InferenceRequest,
@@ -139,7 +163,12 @@ class AdmissionController:
         now = state.now_s
         est_wait = state.max_backlog_s()
         budget = request.latency_budget_s
-        remaining = budget - est_wait
+        # Budget already burned waiting upstream (e.g. in a fair-share
+        # queue). In the arrival-instant path now == arrival, elapsed is
+        # exactly 0.0, and every comparison below is bit-identical to the
+        # pre-tenancy gate.
+        elapsed = max(0.0, now - request.arrival_s)
+        remaining = budget - elapsed - est_wait
 
         def _done(outcome: str, reason: str, req: InferenceRequest,
                   needed: float,
@@ -165,9 +194,13 @@ class AdmissionController:
         except RuntimeError:
             return _done(REJECT, "no_available_nodes", request, needed)
 
-        if plan.meets_deadline:
-            if not self.bucket.try_take(now):
-                return _done(REJECT, "rate_limited", request, needed)
+        # elapsed-aware deadline test: slack_s is measured from arrival,
+        # so a gate running ``elapsed`` seconds later needs that much
+        # extra slack (>= -1e-9 when elapsed == 0, i.e. meets_deadline)
+        if plan.slack_s >= elapsed - 1e-9:
+            taken = self._take_tokens(request.tenant, now)
+            if taken is not None:
+                return _done(REJECT, taken, request, needed)
             return _done(ADMIT, "feasible", request, needed, plan)
 
         # the policy's own plan misses the deadline: feasible only with
@@ -178,10 +211,27 @@ class AdmissionController:
         degraded = request.degraded(
             needed, float(state.accuracies[-1]))
         dplan = self._planner().plan(state, degraded)
-        if not dplan.meets_deadline:
+        if not dplan.slack_s >= elapsed - 1e-9:
             return _done(REJECT, "degraded_plan_misses_deadline",
                          request, needed)
-        if not self.bucket.try_take(now):
-            return _done(REJECT, "rate_limited", request, needed)
+        taken = self._take_tokens(request.tenant, now)
+        if taken is not None:
+            return _done(REJECT, taken, request, needed)
         return _done(DEGRADE, "degraded_to_meet_deadline",
                      degraded, needed, dplan)
+
+    def _take_tokens(self, tenant: str, now: float) -> Optional[str]:
+        """Charge the global and per-tenant buckets atomically: peek the
+        tenant bucket first, take from the global, then take from the
+        tenant (the lazy refill is idempotent at the same ``now``, so the
+        peeked token is still there). Returns the REJECT reason on
+        shortage, None on success — and on shortage *neither* bucket is
+        debited."""
+        tb = self._tenant_bucket(tenant)
+        if tb is not None and tb.peek(now) < 1.0:
+            return "tenant_rate_limited"
+        if not self.bucket.try_take(now):
+            return "rate_limited"
+        if tb is not None:
+            tb.try_take(now)
+        return None

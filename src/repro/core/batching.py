@@ -23,13 +23,25 @@ import dataclasses
 
 @dataclasses.dataclass(frozen=True)
 class BatchFormation:
-    """Formation knobs: engine-batch cap and partial-batch hold window."""
+    """Formation knobs: engine-batch cap and partial-batch hold window.
+
+    ``tenant_cap`` bounds how many items a single tenant contributes to
+    one *mixed* batch when other tenants' shares are waiting at the
+    same level — a flooding tenant then shares each engine batch
+    instead of monopolizing the whole formation prefix. 0 (the
+    default) disables the cap entirely: formation is tenant-blind and
+    byte-identical to the pre-tenancy scheduler. Leftover capacity no
+    other tenant can fill always goes back to the capped tenant
+    (work-conserving), so the cap never idles batch slots.
+    """
     max_batch: int = 1
     window_s: float = 0.0
+    tenant_cap: int = 0
 
     def __post_init__(self):
         assert self.max_batch >= 1, "max_batch must be >= 1"
         assert self.window_s >= 0.0, "window_s must be >= 0"
+        assert self.tenant_cap >= 0, "tenant_cap must be >= 0 (0 = off)"
 
     @property
     def enabled(self) -> bool:

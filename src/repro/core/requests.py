@@ -14,6 +14,10 @@ from typing import Dict, List, Sequence, Tuple
 SLO_STRICT = "strict"          # accuracy contract is non-negotiable
 SLO_DEGRADABLE = "degradable"  # client opted into degraded service
 
+# tenant of every request that never opted into multi-tenancy: single-
+# tenant traffic stays on this one name, so tenancy is zero-cost when off
+DEFAULT_TENANT = "default"
+
 
 @dataclasses.dataclass(frozen=True)
 class InferenceRequest:
@@ -25,10 +29,12 @@ class InferenceRequest:
     arrival_s: float = 0.0      # sim-clock arrival time (online serving)
     deadline_s: float = 0.0     # latency budget from arrival; 0 => derive
     slo_class: str = SLO_DEGRADABLE   # strict => gate may reject, not degrade
+    tenant: str = DEFAULT_TENANT      # multi-tenant serving: SLO/fairness key
 
     def __post_init__(self):
         assert self.slo_class in (SLO_STRICT, SLO_DEGRADABLE), (
             f"unknown slo_class {self.slo_class!r}")
+        assert self.tenant, "tenant must be a non-empty name"
 
     @property
     def latency_budget_s(self) -> float:

@@ -142,6 +142,14 @@ class CellRouter:
         assert len(capacities) == len(self.specs)
         self._cap = [max(float(c), 1e-9) for c in capacities]
         self.outstanding = [0.0] * len(self.specs)
+        # tenant-keyed mirror of the outstanding counters: who the
+        # in-flight work belongs to, per cell. Purely observational —
+        # the routing decision below never reads it (fairness is the
+        # per-cell DRR scheduler's job; the router must not double-
+        # penalize a tenant) — but the rebalancer and the per-tenant
+        # reports need to see *whose* backlog a hot cell is carrying.
+        self.outstanding_by_tenant: List[dict] = [
+            {} for _ in self.specs]
 
     def route(self, request) -> int:
         """Pick the cell for one arrival and record its items as
@@ -158,18 +166,35 @@ class CellRouter:
             c = min(range(n),
                     key=lambda k: (self.outstanding[k] / self._cap[k], k))
         self.outstanding[c] += request.num_items
+        tenant = getattr(request, "tenant", None)
+        if tenant is not None:
+            per = self.outstanding_by_tenant[c]
+            per[tenant] = per.get(tenant, 0.0) + request.num_items
         return c
 
-    def settle(self, cell_id: int, num_items: int):
+    def settle(self, cell_id: int, num_items: int,
+               tenant: Optional[str] = None):
         """A routed request reached a terminal outcome (finished or shed)
-        in ``cell_id``: release its outstanding items."""
+        in ``cell_id``: release its outstanding items. ``tenant`` keys
+        the release against the per-tenant mirror (None skips it — the
+        pre-tenancy call shape)."""
         self.outstanding[cell_id] = max(
             0.0, self.outstanding[cell_id] - num_items)
+        if tenant is not None:
+            per = self.outstanding_by_tenant[cell_id]
+            if tenant in per:
+                per[tenant] = max(0.0, per[tenant] - num_items)
 
     def loads(self) -> List[float]:
         """Per-cell outstanding work normalized by capacity (comparable
         seconds-of-backlog estimates — the rebalance signal)."""
         return [o / c for o, c in zip(self.outstanding, self._cap)]
+
+    def loads_by_tenant(self) -> List[dict]:
+        """Per-cell, per-tenant outstanding work normalized by the
+        cell's capacity — ``loads()`` decomposed by who queued it."""
+        return [{t: o / c for t, o in per.items()}
+                for per, c in zip(self.outstanding_by_tenant, self._cap)]
 
 
 def pick_rebalance(loads: Sequence[float], *,

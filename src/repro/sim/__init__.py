@@ -3,7 +3,7 @@
 Public surface:
   * events      — SimClock, EventQueue, SeqCounter, SimEvent
   * arrivals    — PoissonArrivals, DiurnalArrivals, BurstArrivals,
-                  TraceArrivals, RequestSampler
+                  TraceArrivals, RequestSampler, TenantSpec
   * simulator   — OnlineSimulator, TimedFault, RequestRecord, SimReport
   * sharded     — ShardedSimulator (per-cell gateways behind a root
                   router; ``cells=1`` is byte-identical to the unsharded
@@ -17,20 +17,20 @@ The closed-loop gateway controls (AdmissionController, Autoscaler) live in
 """
 from repro.sim.arrivals import (ArrivalProcess, BurstArrivals,
                                 DiurnalArrivals, PoissonArrivals,
-                                RequestSampler, TraceArrivals)
+                                RequestSampler, TenantSpec, TraceArrivals)
 from repro.sim.events import EventQueue, SeqCounter, SimClock, SimEvent
 from repro.sim.scenarios import (FLEET_HORIZONS, FLEET_SCENARIOS,
-                                 FLEET_SIZES, SCENARIOS, Scenario,
-                                 build_scenario)
+                                 FLEET_SIZES, SCENARIOS, TENANT_SCENARIOS,
+                                 Scenario, build_scenario)
 from repro.sim.simulator import (OnlineSimulator, RequestRecord, SimReport,
                                  TimedFault)
 from repro.sim.sharded import ShardedSimulator    # noqa: E402  (needs simulator)
 
 __all__ = [
     "ArrivalProcess", "BurstArrivals", "DiurnalArrivals", "PoissonArrivals",
-    "RequestSampler", "TraceArrivals", "EventQueue", "SeqCounter",
-    "SimClock", "SimEvent",
+    "RequestSampler", "TenantSpec", "TraceArrivals", "EventQueue",
+    "SeqCounter", "SimClock", "SimEvent",
     "SCENARIOS", "FLEET_SCENARIOS", "FLEET_SIZES", "FLEET_HORIZONS",
-    "Scenario", "build_scenario", "OnlineSimulator", "ShardedSimulator",
-    "RequestRecord", "SimReport", "TimedFault",
+    "TENANT_SCENARIOS", "Scenario", "build_scenario", "OnlineSimulator",
+    "ShardedSimulator", "RequestRecord", "SimReport", "TimedFault",
 ]

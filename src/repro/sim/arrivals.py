@@ -17,10 +17,51 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.profiling import ProfilingTable
-from repro.core.requests import (SLO_DEGRADABLE, SLO_STRICT,
+from repro.core.requests import (DEFAULT_TENANT, SLO_DEGRADABLE, SLO_STRICT,
                                  InferenceRequest)
 
 Arrival = Tuple[float, InferenceRequest]
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's slice of a multi-tenant arrival mix.
+
+    ``weight`` is the tenant's share of the *offered arrival stream*
+    (relative to the other specs' weights) — how much it sends, not how
+    much it deserves. ``share`` is its fair-share entitlement for the
+    gateway's DRR scheduler; None means equal entitlement (1.0)
+    regardless of arrival mix, which is exactly how a noisy neighbor is
+    contained: it may offer 75% of the traffic but is still owed one
+    equal slice. The optional overrides replace the sampler's defaults
+    for this tenant's requests only: ``strict_frac`` marks that
+    fraction SLO-strict, ``deadline_slack`` tightens/loosens the
+    derived latency budget, and ``rate_limit`` is a per-tenant
+    token-bucket refill rate for the admission gate (None = no
+    per-tenant shaping). ``abusive`` is *scenario metadata* — it tags
+    which tenant a noisy-neighbor benchmark treats as the aggressor so
+    reports can single out the victims; the serving stack itself never
+    reads it (the gateway must protect victims without being told who
+    the abuser is).
+    """
+    name: str
+    weight: float = 1.0
+    share: Optional[float] = None
+    strict_frac: Optional[float] = None
+    deadline_slack: Optional[float] = None
+    rate_limit: Optional[float] = None
+    abusive: bool = False
+
+    def __post_init__(self):
+        assert self.name, "tenant name must be non-empty"
+        assert self.weight > 0, "tenant weight must be positive"
+        assert self.share is None or self.share > 0, (
+            "fair-share entitlement must be positive (or None = equal)")
+
+    @property
+    def fair_share(self) -> float:
+        """DRR weight: explicit ``share`` or equal entitlement."""
+        return self.share if self.share is not None else 1.0
 
 
 @dataclasses.dataclass
@@ -50,6 +91,12 @@ class RequestSampler:
     # for the group that actually serves them. 1.0 multiplies exactly
     # (IEEE), keeping all pre-existing seeded traces bit-identical.
     capacity_frac: float = 1.0
+    # multi-tenant arrival mix: each request draws its tenant from these
+    # specs' weights, then applies that tenant's strict_frac /
+    # deadline_slack overrides. With zero or one spec *no extra RNG is
+    # consumed* — the stream (and therefore every pre-existing seeded
+    # trace) stays bit-identical; a single spec just renames the tenant.
+    tenants: Tuple["TenantSpec", ...] = ()
 
     def _perf_bounds(self):
         """(lo, hi) perf_req draw bounds, cached on (availability, table
@@ -73,20 +120,48 @@ class RequestSampler:
         self._bounds_cache = (key, lo, hi)
         return lo, hi
 
+    def _draw_tenant(self, rng: np.random.Generator) -> "TenantSpec":
+        """Pick this request's tenant by mix weight. Only called with
+        >= 2 specs, so single-tenant streams never consume the draw."""
+        weights = [t.weight for t in self.tenants]
+        total = sum(weights)
+        u = float(rng.uniform()) * total
+        acc = 0.0
+        for spec in self.tenants:
+            acc += spec.weight
+            if u < acc:
+                return spec
+        return self.tenants[-1]
+
     def sample(self, rng: np.random.Generator, rid: int,
                arrival_s: float) -> InferenceRequest:
         lo, hi = self._perf_bounds()
         num_items = int(rng.choice(self.item_choices))
         perf_req = float(rng.uniform(lo * self.perf_lo_frac, hi))
         acc_req = float(rng.uniform(*self.acc_range))
+        tenant = DEFAULT_TENANT
+        strict_frac = self.strict_frac
+        slack = self.deadline_slack
+        if len(self.tenants) == 1:
+            spec = self.tenants[0]          # rename only: no extra draw
+        elif self.tenants:
+            spec = self._draw_tenant(rng)
+        else:
+            spec = None
+        if spec is not None:
+            tenant = spec.name
+            if spec.strict_frac is not None:
+                strict_frac = spec.strict_frac
+            if spec.deadline_slack is not None:
+                slack = spec.deadline_slack
         slo_class = SLO_DEGRADABLE
-        if self.strict_frac > 0 and rng.uniform() < self.strict_frac:
+        if strict_frac > 0 and rng.uniform() < strict_frac:
             slo_class = SLO_STRICT
         return InferenceRequest(
             rid=rid, num_items=num_items, perf_req=perf_req,
             acc_req=acc_req, arrival_s=arrival_s,
-            deadline_s=self.deadline_slack * num_items / perf_req,
-            slo_class=slo_class)
+            deadline_s=slack * num_items / perf_req,
+            slo_class=slo_class, tenant=tenant)
 
 
 class ArrivalProcess:

@@ -36,25 +36,32 @@ with custom knobs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.profiling import ProfilingTable
 from repro.sim.arrivals import (Arrival, BurstArrivals, DiurnalArrivals,
                                 PoissonArrivals, RequestSampler,
-                                TraceArrivals)
+                                TenantSpec, TraceArrivals)
 from repro.sim.simulator import TimedFault
 
 
 @dataclasses.dataclass
 class Scenario:
-    """One reproducible serving situation: who arrives when, what breaks."""
+    """One reproducible serving situation: who arrives when, what breaks.
+
+    ``tenants`` carries the multi-tenant mix (when any) out of the
+    builder so the harness can wire the gateway to match — fair-share
+    weights and per-tenant rate limits come from these specs. Empty for
+    every single-tenant scenario.
+    """
     name: str
     description: str
     arrivals: List[Arrival]
     faults: List[TimedFault]
     horizon_s: float
+    tenants: Tuple[TenantSpec, ...] = ()
 
 
 def _rate_for_load(table: ProfilingTable, sampler: RequestSampler,
@@ -278,6 +285,117 @@ def fleet_4096(table: ProfilingTable, *, seed: int = 0,
     return fleet(table, seed=seed, name="fleet-4096", **kwargs)
 
 
+# ---- multi-tenant scenarios -------------------------------------------
+def _merge_streams(*streams: Sequence[Arrival]) -> List[Arrival]:
+    """Merge independently generated arrival streams into one trace:
+    time-sorted, rids reassigned in arrival order (the simulator keys
+    records by rid, so merged traces must not collide)."""
+    merged = sorted((a for s in streams for a in s), key=lambda a: a[0])
+    return [(t, dataclasses.replace(req, rid=i))
+            for i, (t, req) in enumerate(merged)]
+
+
+def noisy_neighbor(table: ProfilingTable, *, seed: int = 0,
+                   horizon_s: float = 40.0, load: float = 2.4,
+                   abuser_frac: float = 0.75,
+                   sampler: Optional[RequestSampler] = None) -> Scenario:
+    """One tenant floods the gateway with ``abuser_frac`` of a
+    ``load`` > 1 offered stream while two well-behaved tenants stay
+    comfortably inside capacity. The BENCH_7 headline case: with fair
+    scheduling on, the victims' admitted requests must keep meeting
+    their deadlines no matter what the hot tenant does; tenant-blind
+    serving lets the abuser's backlog push everyone's p99 over budget.
+    Entitlements are equal (``share`` unset) and every tenant carries
+    the *same* per-tenant rate limit — an equal slice of the cluster's
+    admittable request rate — so the gateway is *not* told who the
+    abuser is; the abuser simply exhausts its own slice."""
+    victims_frac = (1.0 - abuser_frac) / 2.0
+    # equal slice of the capacity-rate (the request rate a load of 1.0
+    # would offer): victims run well inside theirs, the abuser's flood
+    # drains its own bucket and nobody else's
+    slice_rate = _rate_for_load(table, RequestSampler(table), 1.0) / 3.0
+    tenants = (
+        TenantSpec("tenant-hot", weight=abuser_frac, abusive=True,
+                   rate_limit=slice_rate),
+        TenantSpec("tenant-a", weight=victims_frac,
+                   rate_limit=slice_rate),
+        TenantSpec("tenant-b", weight=victims_frac,
+                   rate_limit=slice_rate),
+    )
+    sampler = sampler or RequestSampler(table, tenants=tenants)
+    rate = _rate_for_load(table, sampler, load)
+    return Scenario(
+        name="noisy-neighbor",
+        description=f"{load:.0%}-of-capacity Poisson stream, "
+                    f"{abuser_frac:.0%} of it from one abusive tenant; "
+                    "two victim tenants offer well under capacity",
+        arrivals=PoissonArrivals(rate, horizon_s, sampler,
+                                 seed).generate(),
+        faults=[], horizon_s=horizon_s, tenants=tenants)
+
+
+def tenant_skew(table: ProfilingTable, *, seed: int = 0,
+                horizon_s: float = 40.0, load: float = 0.9,
+                sampler: Optional[RequestSampler] = None) -> Scenario:
+    """Four tenants with a heavily skewed but *declared* mix: fair-share
+    entitlements track the arrival weights and each tenant carries a
+    matching per-tenant admission rate limit (25% headroom), so the
+    per-tenant token buckets shape exactly the traffic each tenant was
+    sold. Near-capacity load keeps the DRR ring busy without the
+    overload shedding dominating the metrics."""
+    weights = (0.55, 0.25, 0.15, 0.05)
+    base_rate = _rate_for_load(table, RequestSampler(table), load)
+    tenants = tuple(
+        TenantSpec(f"tenant-{i}", weight=w, share=w,
+                   rate_limit=1.25 * w * base_rate)
+        for i, w in enumerate(weights))
+    sampler = sampler or RequestSampler(table, tenants=tenants)
+    rate = _rate_for_load(table, sampler, load)
+    return Scenario(
+        name="tenant-skew",
+        description=f"4 tenants at {load:.0%} load, mix "
+                    f"{'/'.join(f'{w:.0%}' for w in weights)}; "
+                    "entitlements and rate limits track the mix",
+        arrivals=PoissonArrivals(rate, horizon_s, sampler,
+                                 seed).generate(),
+        faults=[], horizon_s=horizon_s, tenants=tenants)
+
+
+def flash_crowd_tenant(table: ProfilingTable, *, seed: int = 0,
+                       horizon_s: float = 60.0, base_load: float = 0.45,
+                       hot_base_load: float = 0.05,
+                       hot_peak_load: float = 2.0,
+                       burst_start_frac: float = 1 / 3,
+                       burst_len_frac: float = 1 / 6) -> Scenario:
+    """Flash crowd confined to one tenant: three steady tenants share a
+    comfortable base load while a fourth idles — then bursts alone to
+    ``hot_peak_load`` x capacity for a window. Unlike ``flash-crowd``
+    (where the spike is everyone's), the right outcome here is
+    *asymmetric*: the bursting tenant eats its own shed/queueing while
+    the steady tenants ride through untouched."""
+    steady_specs = tuple(
+        TenantSpec(f"tenant-{c}", weight=1.0) for c in "abc")
+    hot_spec = (TenantSpec("tenant-hot", weight=1.0, abusive=True),)
+    base_sampler = RequestSampler(table, tenants=steady_specs)
+    hot_sampler = RequestSampler(table, tenants=hot_spec)
+    base = _rate_for_load(table, base_sampler, base_load)
+    hot_base = _rate_for_load(table, hot_sampler, hot_base_load)
+    hot_peak = _rate_for_load(table, hot_sampler, hot_peak_load)
+    t0 = horizon_s * burst_start_frac
+    t1 = t0 + horizon_s * burst_len_frac
+    arrivals = _merge_streams(
+        PoissonArrivals(base, horizon_s, base_sampler, seed).generate(),
+        BurstArrivals(hot_base, hot_peak, t0, t1, horizon_s, hot_sampler,
+                      seed + 1).generate())
+    return Scenario(
+        name="flash-crowd-tenant",
+        description=f"3 steady tenants at {base_load:.0%} total; "
+                    f"tenant-hot bursts to {hot_peak_load:.0%} of "
+                    f"capacity in [{t0:.0f}s, {t1:.0f}s)",
+        arrivals=arrivals, faults=[], horizon_s=horizon_s,
+        tenants=steady_specs + hot_spec)
+
+
 SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "steady": steady,
     "diurnal": diurnal,
@@ -298,6 +416,16 @@ FLEET_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
     "fleet-256": fleet_256,
     "fleet-1024": fleet_1024,
     "fleet-4096": fleet_4096,
+}
+
+# multi-tenant scenarios resolve through build_scenario (and run_sim's
+# ``--scenario tenants`` alias) but stay out of the classic ``all``
+# sweep: their metrics only mean something next to the per-tenant
+# breakdown and the fairness gate
+TENANT_SCENARIOS: Dict[str, Callable[..., Scenario]] = {
+    "noisy-neighbor": noisy_neighbor,
+    "tenant-skew": tenant_skew,
+    "flash-crowd-tenant": flash_crowd_tenant,
 }
 
 
@@ -322,10 +450,11 @@ def build_scenario(name: str, table: ProfilingTable, *, seed: int = 0,
                    **kwargs) -> Scenario:
     if name.startswith(TRACE_PREFIX):
         return trace_file(table, name[len(TRACE_PREFIX):], **kwargs)
-    builder = SCENARIOS.get(name) or FLEET_SCENARIOS.get(name)
+    builder = (SCENARIOS.get(name) or FLEET_SCENARIOS.get(name)
+               or TENANT_SCENARIOS.get(name))
     if builder is None:
         raise KeyError(
             f"unknown scenario {name!r}; have "
-            f"{sorted(SCENARIOS) + sorted(FLEET_SCENARIOS)}, or "
-            f"'{TRACE_PREFIX}<path>' for file-backed replay")
+            f"{sorted(SCENARIOS) + sorted(FLEET_SCENARIOS) + sorted(TENANT_SCENARIOS)}"
+            f", or '{TRACE_PREFIX}<path>' for file-backed replay")
     return builder(table, seed=seed, **kwargs)

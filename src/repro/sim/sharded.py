@@ -51,6 +51,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.control.admission import AdmissionController
 from repro.control.autoscaler import Autoscaler, ScalingAction
+from repro.control.fairshare import FairShareScheduler
 from repro.core.cluster import SimBackend
 from repro.core.profiling import ProfilingTable
 from repro.core.requests import InferenceRequest
@@ -93,9 +94,13 @@ class ShardedSimulator:
                  admission: bool = False,
                  admission_rate: Optional[float] = None,
                  admission_burst: float = 8.0,
+                 admission_tenant_rates: Optional[Dict[str, float]] = None,
                  autoscale: bool = False,
                  max_batch: int = 1,
                  formation_window_s: float = 0.0,
+                 fairshare: bool = False,
+                 fairshare_weights: Optional[Dict[str, float]] = None,
+                 fairshare_quantum: int = 1024,
                  rebalance_s: float = 0.0,
                  steal_threshold_s: float = 1.0):
         self.scenario = scenario
@@ -143,20 +148,36 @@ class ShardedSimulator:
             if admission:
                 # one bucket per cell at a 1/cells slice of the root
                 # refill budget: the fleet-wide admission rate stays the
-                # configured one, and cells=1 keeps the exact rate
+                # configured one, and cells=1 keeps the exact rate.
+                # Per-tenant rates split the same way — a tenant's
+                # fleet-wide contract is the sum of its per-cell slices.
                 rate = None
                 if admission_rate is not None and admission_rate > 0:
                     rate = admission_rate / len(self.specs)
+                trates = None
+                if admission_tenant_rates:
+                    trates = {t: r / len(self.specs)
+                              for t, r in admission_tenant_rates.items()}
                 adm = AdmissionController(ctable, rate=rate,
-                                          burst=admission_burst)
+                                          burst=admission_burst,
+                                          tenant_rates=trates)
             asc = None
             if autoscale:
                 # constructed even when this cell drew no standby nodes:
                 # an empty pool can still adopt stolen reserve later
                 asc = Autoscaler(ctable, list(spec.standby))
+            fss = None
+            if fairshare:
+                # one DRR ring per cell: fair release is decided against
+                # the backlog the owning cell actually serves, so a
+                # tenant hot in one cell cannot slow its victims in
+                # another. Off (the default) adds nothing to the cell —
+                # the cells=1 byte-identity guarantee is untouched.
+                fss = FairShareScheduler(fairshare_weights,
+                                         quantum_items=fairshare_quantum)
             cell = OnlineSimulator(
                 gn, (), (), scenario=scenario, horizon_s=self.horizon_s,
-                admission=adm, autoscaler=asc,
+                admission=adm, autoscaler=asc, fairshare=fss,
                 formation_window_s=formation_window_s,
                 event_queue=EventQueue(counter))
             cell.on_settled = (
@@ -185,7 +206,8 @@ class ShardedSimulator:
 
     # ---- router feedback ----------------------------------------------
     def _settled(self, cell_id: int, rec: RequestRecord):
-        self.router.settle(cell_id, rec.request.num_items)
+        self.router.settle(cell_id, rec.request.num_items,
+                           tenant=rec.request.tenant)
 
     # ---- rebalancing ---------------------------------------------------
     def _do_rebalance(self, now: float):

@@ -48,9 +48,11 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 from repro.control.admission import (ADMIT, DEGRADE, REJECT,
                                      AdmissionController)
 from repro.control.autoscaler import RETIRE, SPAWN, Autoscaler, ScalingAction
+from repro.control.fairshare import FairShareScheduler
 from repro.core.batching import BatchFormation
 from repro.core.requests import (Assignment, Dispatch, ExecutionResult,
-                                 InferenceRequest, violation_summary)
+                                 InferenceRequest, _percentile,
+                                 violation_summary)
 from repro.core.resource_manager import Event, GatewayNode
 from repro.sched import ClusterState, Plan
 from repro.sim.events import EventQueue, SimClock, SimEvent
@@ -342,7 +344,62 @@ class SimReport:
         s["scale_downs"] = float(
             sum(a.kind == RETIRE for a in self.scaling))
         s["mean_scale_up_latency_s"] = (sum(lat) / len(lat)) if lat else 0.0
+        # fairness index only when the run actually had >= 2 tenants:
+        # single-tenant summaries keep the exact pre-tenancy key set
+        # (the tenants=1 byte-identity pin hashes this dict)
+        if len({r.request.tenant for r in self.records}) >= 2:
+            s["fairness_jain"] = self.jain_fairness()
         return s
+
+    def tenant_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-tenant serving outcomes. ``service_ratio`` is the input
+        to the Jain index: requests served within deadline over requests
+        offered, so both shedding and admitted-then-violated hurt a
+        tenant's share equally (the time span cancels out of the
+        ratio). ``admitted_violation_rate`` is the BENCH_7 headline —
+        of the requests the gate let in, how many missed."""
+        by_tenant: Dict[str, List[RequestRecord]] = {}
+        for r in self.records:
+            by_tenant.setdefault(r.request.tenant, []).append(r)
+        span = max(self.end_s, self.horizon_s, 1e-12)
+        out: Dict[str, Dict[str, float]] = {}
+        for tenant in sorted(by_tenant):
+            recs = by_tenant[tenant]
+            admitted = [r for r in recs if r.admitted]
+            met = sum(r.meets_deadline for r in admitted)
+            lat = sorted(r.latency_s for r in admitted if r.done)
+            out[tenant] = {
+                "offered": float(len(recs)),
+                "admitted": float(len(admitted)),
+                "rejected": float(len(recs) - len(admitted)),
+                "shed_rate": (len(recs) - len(admitted))
+                             / max(len(recs), 1),
+                "completed": float(sum(r.done for r in admitted)),
+                "met_deadline": float(met),
+                "goodput_rps": met / span,
+                "admitted_violation_rate":
+                    sum(not r.meets_deadline for r in admitted)
+                    / max(len(admitted), 1),
+                "degraded": float(
+                    sum(r.degraded_admission for r in recs)),
+                "p50_latency_s": _percentile(lat, 0.50),
+                "p99_latency_s": _percentile(lat, 0.99),
+                "service_ratio": met / max(len(recs), 1),
+            }
+        return out
+
+    def jain_fairness(self) -> float:
+        """Jain's index J = (sum x)^2 / (n * sum x^2) over per-tenant
+        service ratios: 1.0 = perfectly even service, 1/n = one tenant
+        got everything. All-zero ratios count as perfectly fair (every
+        tenant equally starved)."""
+        xs = [v["service_ratio"] for v in self.tenant_summary().values()]
+        if len(xs) <= 1:
+            return 1.0
+        total = sum(xs)
+        if total <= 0.0:
+            return 1.0
+        return total * total / (len(xs) * sum(x * x for x in xs))
 
 
 class OnlineSimulator:
@@ -359,20 +416,26 @@ class OnlineSimulator:
                  scenario: str = "custom", horizon_s: float = 0.0,
                  admission: Optional[AdmissionController] = None,
                  autoscaler: Optional[Autoscaler] = None,
+                 fairshare: Optional[FairShareScheduler] = None,
                  legacy_control_plane: bool = False,
                  max_batch: Optional[int] = None,
                  formation_window_s: float = 0.0,
+                 tenant_batch_cap: int = 0,
                  event_queue: Optional[EventQueue] = None):
         self.gn = gn
         self.backend = gn.backend
         self.admission = admission
         self.autoscaler = autoscaler
+        # multi-tenant fair scheduler in front of the gate: arrivals
+        # queue per tenant and reach the gate in DRR order. None (the
+        # default) is the pre-tenancy arrival->gate fast path, untouched.
+        self.fairshare = fairshare
         # continuous batching: engine-batch cap per node runtime. None
         # adopts the GN's own cap, so planner pricing and execution are
         # configured in one place; 1 = the sequential pre-batching model
         self.batching = BatchFormation(
             max_batch=gn.max_batch if max_batch is None else max_batch,
-            window_s=formation_window_s)
+            window_s=formation_window_s, tenant_cap=tenant_batch_cap)
         if max_batch is not None and max_batch != gn.max_batch:
             # the GN snapshots carry gn.max_batch into every Plan — a
             # runtime batching differently would break the plan-once
@@ -472,6 +535,14 @@ class OnlineSimulator:
             req: InferenceRequest = ev.payload["request"]
             rec = RequestRecord(request=req, arrival_s=req.arrival_s)
             self.records[req.rid] = rec
+            if self.fairshare is not None:
+                # tenant FIFO first; the DRR ring decides who reaches
+                # the gate, so a flooding tenant queues behind its own
+                # share instead of ahead of everyone else's arrivals
+                self.fairshare.enqueue(req)
+                self._fair_drain(now)
+                self._autoscale_tick(now, None)
+                return
             # one ClusterState snapshot per event, shared by both
             # controllers (and by the plan the gate hands to the queues)
             state = (self._snapshot(now) if self.admission is not None
@@ -555,19 +626,8 @@ class OnlineSimulator:
             state = self._snapshot(now)
         decision = self.admission.decide(rec.request, state)
         if decision.outcome == REJECT:
-            rec.rejected = True
-            rec.reject_reason = decision.reason
-            rec.degraded_admission = False
-            rec.effective_request = None
-            if self.autoscaler is not None:
-                # a shed is a failed SLO: it must push the autoscaler
-                # toward capacity even though no queue ever saw it
-                self.autoscaler.record_outcome(False)
-            self._log(f"rid={rec.request.rid} REJECTED "
-                      f"({decision.reason}, est_wait="
-                      f"{decision.est_wait_s:.3f}s)")
-            if self.on_settled is not None:
-                self.on_settled(rec)
+            self._shed(rec, decision.reason,
+                       detail=f", est_wait={decision.est_wait_s:.3f}s")
             return
         rec.rejected = False
         if decision.outcome == DEGRADE:
@@ -579,6 +639,44 @@ class OnlineSimulator:
         else:
             assert decision.outcome == ADMIT
         self._dispatch(rec, now, plan=decision.plan)
+
+    def _shed(self, rec: RequestRecord, reason: str, detail: str = ""):
+        """Terminal rejection: shared by the gate's REJECT outcome and
+        the fair scheduler's expired-in-queue path. Accounting is
+        identical either way — a shed is a failed SLO for the
+        autoscaler, a settled record for the sharded root."""
+        rec.rejected = True
+        rec.reject_reason = reason
+        rec.degraded_admission = False
+        rec.effective_request = None
+        if self.autoscaler is not None:
+            # a shed is a failed SLO: it must push the autoscaler
+            # toward capacity even though no queue ever saw it
+            self.autoscaler.record_outcome(False)
+        self._log(f"rid={rec.request.rid} REJECTED ({reason}{detail})")
+        if self.on_settled is not None:
+            self.on_settled(rec)
+
+    def _fair_drain(self, now: float):
+        """Release fair-queue requests to the gate in DRR order until
+        the scheduler withholds (everything released, or the
+        outstanding-items cap is full). A request whose whole latency
+        budget burned while queued is shed without planning — the gate
+        would reject it anyway, this just skips the wasted plan."""
+        fs = self.fairshare
+        assert fs is not None
+        while True:
+            req = fs.next_request()
+            if req is None:
+                return
+            rec = self.records[req.rid]
+            budget = req.latency_budget_s
+            if budget != float("inf") and now - req.arrival_s >= budget:
+                self._shed(rec, "fairshare_expired")
+                continue
+            self._admit(rec, now, None)
+            if not rec.rejected:
+                fs.on_admitted(req.tenant, req.num_items)
 
     def _autoscaler_ready(self, now: float) -> bool:
         return self.autoscaler is not None and self.autoscaler.ready(now)
@@ -721,6 +819,8 @@ class OnlineSimulator:
             return _BatchOp(op_id=0, level=level,
                             takes=[(head, n_full * cap)],
                             n_items=n_full * cap, batch_size=cap)
+        if self.batching.tenant_cap > 0:
+            return self._form_op_tenant_aware(nq, cap, level)
         takes = [(head, head.unclaimed)]
         total = head.unclaimed
         for s in itertools.islice(nq.queue, 1, None):
@@ -739,6 +839,54 @@ class OnlineSimulator:
                 break       # clean multiple: nothing joinable in order
             takes.append((s, take))
             total += take
+        return _BatchOp(op_id=0, level=level, takes=takes,
+                        n_items=total, batch_size=min(total, cap))
+
+    def _form_op_tenant_aware(self, nq: NodeRuntime, cap: int,
+                              level: int) -> _BatchOp:
+        """Mixed-batch formation with a per-tenant item cap: pass 1
+        takes up to ``tenant_cap`` items per tenant over the same-level
+        FIFO prefix (so a flooding tenant cannot fill the whole batch
+        while another tenant's share waits right behind it); pass 2
+        re-fills leftover slots in FIFO order *ignoring* the caps, so
+        the cap never launches a smaller batch than the tenant-blind
+        scheduler would (work conservation). The tail-only join rule is
+        unchanged — a joiner contributes at most its own partial-batch
+        remainder."""
+        cap_t = self.batching.tenant_cap
+        prefix: List[_Share] = []
+        for s in nq.queue:
+            if s.assignment.apx_level != level:
+                break       # strict FIFO across levels, exactly as before
+            prefix.append(s)
+            if sum(p.unclaimed for p in prefix) >= cap + cap_t:
+                break       # enough candidates to fill any batch shape
+
+        def _tail(s: _Share) -> int:
+            return s.unclaimed if s.unclaimed < cap else s.unclaimed % cap
+
+        taken: Dict[int, int] = {}          # share_id -> items this op
+        by_tenant: Dict[str, int] = {}
+        total = 0
+        for s in prefix:                    # pass 1: capped
+            if total >= cap:
+                break
+            tenant = self.records[s.rid].request.tenant
+            room = min(_tail(s), cap - total,
+                       cap_t - by_tenant.get(tenant, 0))
+            if room > 0:
+                taken[s.share_id] = room
+                by_tenant[tenant] = by_tenant.get(tenant, 0) + room
+                total += room
+        for s in prefix:                    # pass 2: work-conserving fill
+            if total >= cap:
+                break
+            room = min(_tail(s) - taken.get(s.share_id, 0), cap - total)
+            if room > 0:
+                taken[s.share_id] = taken.get(s.share_id, 0) + room
+                total += room
+        takes = [(s, taken[s.share_id]) for s in prefix
+                 if taken.get(s.share_id, 0) > 0]
         return _BatchOp(op_id=0, level=level, takes=takes,
                         n_items=total, batch_size=min(total, cap))
 
@@ -831,6 +979,12 @@ class OnlineSimulator:
                   f"{'OK' if rec.meets_deadline else 'DEADLINE-MISS'}")
         if self.on_settled is not None:
             self.on_settled(rec)
+        if self.fairshare is not None:
+            # settled items free outstanding capacity: let the ring
+            # release the next round of fair-queue work immediately
+            self.fairshare.on_done(rec.request.tenant,
+                                   rec.request.num_items)
+            self._fair_drain(now)
 
     # ---- faults ------------------------------------------------------
     def _disconnect(self, node: str):

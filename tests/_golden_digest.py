@@ -1,0 +1,88 @@
+"""Canonical digest of a simulator run — the tenants=1 byte-identity pin.
+
+Multi-tenancy must be *zero-cost when off*: a run with every request on
+the default tenant has to produce the identical records, log lines, and
+summary the pre-tenancy simulator produced. This module computes a
+stable sha256 over exactly those three surfaces; the committed
+``tests/golden/sim_digest.json`` was generated from the pre-tenancy
+tree, and ``tests/test_tenants.py`` recomputes the digests on every run.
+
+Float formatting relies on Python's shortest-roundtrip ``repr`` (stable
+since 3.1) and the simulator's metrics are all sim-clock quantities, so
+the digests are machine-independent.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+
+from repro.configs import get_config
+from repro.control import AdmissionController, Autoscaler
+from repro.core.cluster import SimBackend, cluster_nodes
+from repro.core.profiling import ProfilingTable
+from repro.core.resource_manager import GatewayNode
+from repro.core.variants import VariantPool
+from repro.sim import OnlineSimulator, build_scenario
+
+ARCH = "phi4-mini-3.8b"
+HORIZON_S = 6.0
+SEED = 0
+NUM_STANDBY = 2
+DIGEST_CASES = tuple(
+    (scenario, "proportional", control)
+    for scenario in ("steady", "diurnal", "node-churn", "straggler-storm",
+                     "overload", "flash-crowd")
+    for control in ("none", "full"))
+
+
+def run_report(scenario: str, policy: str, control: str):
+    """One simulator run, constructed exactly like run_sim.run_one's
+    unsharded branch (seed 0, horizon 6, two standby slices)."""
+    pool = VariantPool(get_config(ARCH))
+    table = ProfilingTable(pool, cluster_nodes(NUM_STANDBY), seq_len=512)
+    sc = build_scenario(scenario, table, seed=SEED, horizon_s=HORIZON_S)
+    gn = GatewayNode(table, SimBackend(table, noise_std=0.0, seed=SEED),
+                     policy=policy)
+    admission = None
+    if control in ("admission", "full"):
+        admission = AdmissionController(table, rate=None)
+    autoscaler = None
+    if control in ("autoscale", "full"):
+        standby = [n.name for n in table.nodes if not n.available]
+        autoscaler = Autoscaler(table, standby)
+    sim = OnlineSimulator(gn, sc.arrivals, sc.faults, scenario=sc.name,
+                          horizon_s=sc.horizon_s, admission=admission,
+                          autoscaler=autoscaler)
+    return sim.run()
+
+
+def report_digest(report) -> str:
+    """sha256 over the run's records + log + summary (wall-clock and
+    event-count fields excluded — they are host-speed trivia, not
+    serving behaviour)."""
+    records = [
+        (int(r.request.rid), repr(r.arrival_s), repr(r.dispatch_s),
+         repr(r.finish_s), bool(r.rejected), r.reject_reason,
+         bool(r.degraded_admission), int(r.redistributed),
+         repr(r.latency_s) if r.done else "",
+         bool(r.meets_deadline) if r.done else None)
+        for r in report.records]
+    summary = sorted(
+        (k, repr(v)) for k, v in report.summary().items()
+        if k not in ("wall_s", "n_events"))
+    blob = json.dumps({"records": records, "log": report.log,
+                       "summary": summary}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def compute_digests() -> dict:
+    return {f"{s}/{p}/{c}": report_digest(run_report(s, p, c))
+            for s, p, c in DIGEST_CASES}
+
+
+if __name__ == "__main__":
+    import pathlib
+    out = pathlib.Path(__file__).parent / "golden" / "sim_digest.json"
+    out.write_text(json.dumps(compute_digests(), indent=2, sort_keys=True)
+                   + "\n")
+    print(f"wrote {out}")
