@@ -75,6 +75,32 @@ BENCH_ANCHOR = os.path.join(REPO_ROOT, "BENCH_4.json")
 BENCH_CELLS = os.path.join(REPO_ROOT, "BENCH_6.json")
 PLAN_POLICIES = ("uniform", "uniform_apx", "asymmetric", "proportional")
 CELL_COUNTS = (1, 4, 16)
+# version stamp on every anchor this tool writes; the --check gates
+# refuse anchors from a different schema generation (see load_anchor)
+SCHEMA_VERSION = 1
+
+
+def load_anchor(path: str):
+    """Load a committed anchor JSON, validating its schema_version.
+
+    Returns ``(anchor, None)`` or ``(None, failure_message)``. A missing
+    or mismatched version means the anchor predates (or postdates) this
+    tool's schema — comparing cells across schema generations produces
+    nonsense gates, so the fix is to re-anchor, not to squint."""
+    try:
+        with open(path) as f:
+            anchor = json.load(f)
+    except (OSError, ValueError) as e:
+        return None, f"cannot read anchor {path}: {e}"
+    got = anchor.get("schema_version")
+    if got != SCHEMA_VERSION:
+        return None, (
+            f"anchor {os.path.basename(path)} has schema_version "
+            f"{got!r}, this tool writes {SCHEMA_VERSION} — re-anchor "
+            f"needed: regenerate the file with the current tool "
+            f"(e.g. `python benchmarks/bench_sched.py --json {path}`) "
+            "on a known-good tree and commit it")
+    return anchor, None
 
 
 @functools.lru_cache(maxsize=1)
@@ -380,8 +406,10 @@ def check_cells_regression(result: dict, anchor_path: str,
     end-to-end speedup of the largest cell count vs the single gateway
     must not shrink more than ``tolerance``. Speedups are same-process
     ratios, so the comparison tracks code, not host speed."""
-    with open(anchor_path) as f:
-        anchor = json.load(f)
+    anchor, err = load_anchor(anchor_path)
+    if err:
+        print(f"cells check FAILED: {err}", file=sys.stderr)
+        return 1
     failures = []
     if not result.get("cells1_identical"):
         failures.append("cells=1 is no longer metric-identical to the "
@@ -422,8 +450,10 @@ def check_regression(result: dict, anchor_path: str,
     anchor's machine and a CI runner would flag hardware, not code. A
     real control-plane regression shrinks the fresh/reference ratio on
     any machine. Absolute deltas are printed as context only."""
-    with open(anchor_path) as f:
-        anchor = json.load(f)
+    anchor, err = load_anchor(anchor_path)
+    if err:
+        print(f"perf check FAILED: {err}", file=sys.stderr)
+        return 1
     failures = []
     for key, fresh in result["plan_speedup"].items():
         base = anchor.get("plan_speedup", {}).get(key)
@@ -511,7 +541,8 @@ def main(argv=None) -> int:
                          "or a broken cells=1 identity; implies --cells")
     args = ap.parse_args(argv)
 
-    result = {"bench": "bench_sched", "arch": ARCH, "seed": args.seed,
+    result = {"bench": "bench_sched", "schema_version": SCHEMA_VERSION,
+              "arch": ARCH, "seed": args.seed,
               "fleet": args.fleet, "plan_iters": args.plans}
 
     print(f"# plans/sec on fleet-{args.fleet} (cold stream of distinct "
@@ -560,7 +591,8 @@ def main(argv=None) -> int:
     if args.cells or args.cells_json or args.check_cells:
         print("# sharded control plane, fleet-1024 "
               f"(cells {CELL_COUNTS} vs single gateway)")
-        cells_result = {"bench": "bench_sched_cells", "arch": ARCH,
+        cells_result = {"bench": "bench_sched_cells",
+                        "schema_version": SCHEMA_VERSION, "arch": ARCH,
                         "seed": args.seed, "cell_counts": list(CELL_COUNTS)}
         cells_result.update(bench_cells(args.seed))
         sg = cells_result["single_gateway"]

@@ -693,6 +693,18 @@ def check_tenant_fairness(rows, anchor_path: str,
             anchor = json.load(f)
     except (OSError, ValueError) as e:
         return [f"cannot read tenant-fairness anchor {anchor_path}: {e}"]
+    got_version = anchor.get("schema_version")
+    if got_version != SCHEMA_VERSION:
+        # comparing cells across schema generations produces nonsense
+        # gates; the fix is to re-anchor, not to squint
+        return [
+            f"anchor {os.path.basename(anchor_path)} has schema_version "
+            f"{got_version!r}, this tool writes {SCHEMA_VERSION} — "
+            f"re-anchor needed: regenerate with `python benchmarks/"
+            f"run_sim.py --scenario tenants --policies proportional "
+            f"--control full --fairshare both --horizon 20 "
+            f"--tenant-bench-json {os.path.basename(anchor_path)}` on a "
+            "known-good tree and commit it"]
     fresh = {
         (f"{r['scenario']}/{r['policy']}/{r['control']}/fs-on"):
             _tenant_cell(r)

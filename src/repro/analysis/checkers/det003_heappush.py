@@ -1,0 +1,37 @@
+"""DET003 — raw ``heapq`` pushes of ``(time, ...)`` tuples.
+
+The event queue's total order is ``(time, seq)`` with ``seq`` drawn
+from :class:`repro.sim.events.SeqCounter`. A direct
+``heapq.heappush(heap, (t, payload))`` bypasses the counter: two events
+at the same timestamp then tie-break on the payload (or crash on an
+uncomparable one), and the sharded merge loop — which relies on every
+cell drawing seqs from one shared counter — silently loses its
+cells=1 byte-identity (the exact bug class PR 6 had to design around).
+Push through ``EventQueue.push`` instead; heaps of plain scalars or of
+tuples with an explicit integer tie-break in slot 1 may be suppressed
+with a reason.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Checker, call_name
+
+PUSH_FNS = ("heappush", "heapreplace", "heappushpop")
+
+
+class RawHeapPushChecker(Checker):
+    code = "DET003"
+    name = "raw-heappush"
+    hint = ("schedule through events.EventQueue.push (SeqCounter "
+            "tie-break) instead of pushing (time, ...) tuples directly")
+
+    def visit_Call(self, node: ast.Call):
+        name = call_name(node)
+        fn = name.rsplit(".", 1)[-1]
+        if fn in PUSH_FNS and (name == fn or name == f"heapq.{fn}"):
+            item = node.args[1] if len(node.args) >= 2 else None
+            if isinstance(item, ast.Tuple):
+                self.report(node, f"{fn}() of a tuple bypasses "
+                                  "events.SeqCounter ordering")
+        self.generic_visit(node)

@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Union
 
+from repro.analysis import sanitize
 from repro.core.profiling import ProfilingTable
 from repro.core.requests import SLO_DEGRADABLE, InferenceRequest
 from repro.sched import ClusterState, Plan, Policy, resolve_policy
@@ -55,11 +56,15 @@ class TokenBucket:
         self.tokens = float(burst)
         self._last_s = 0.0
 
+    # REPRO_SANITIZE=1 asserts 0 <= tokens <= burst at every refill/take
+    _check_bounds = staticmethod(sanitize.hook(sanitize.check_bucket))
+
     def _refill(self, now: float):
         if now > self._last_s:
             self.tokens = min(self.burst,
                               self.tokens + (now - self._last_s) * self.rate)
             self._last_s = now
+        self._check_bounds(self.tokens, self.burst)
 
     def try_take(self, now: float) -> bool:
         if self.rate is None:
@@ -67,6 +72,7 @@ class TokenBucket:
         self._refill(now)
         if self.tokens >= 1.0:
             self.tokens -= 1.0
+            self._check_bounds(self.tokens, self.burst)
             return True
         return False
 

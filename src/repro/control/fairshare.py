@@ -29,7 +29,13 @@ from __future__ import annotations
 import collections
 from typing import Deque, Dict, List, Optional
 
+from repro.analysis import sanitize
 from repro.core.requests import InferenceRequest
+
+# REPRO_SANITIZE=1 arms the DRR deficit-bound and outstanding-ledger
+# invariants at every release/settle; no-op closures otherwise
+_check_drr_release = sanitize.hook(sanitize.check_drr_release)
+_check_outstanding = sanitize.hook(sanitize.check_outstanding)
 
 
 def weighted_max_min(demands: Dict[str, float], weights: Dict[str, float],
@@ -122,6 +128,7 @@ class FairShareScheduler:
         take = min(have, items)
         self._outstanding[tenant] = have - take
         self._outstanding_total -= take
+        _check_outstanding(self._outstanding, self._outstanding_total)
 
     # ---- consumer side ------------------------------------------------
     def _eligible(self) -> Dict[str, bool]:
@@ -178,6 +185,12 @@ class FairShareScheduler:
             if self._deficit[tenant] >= cost:
                 req = q.popleft()
                 self._deficit[tenant] -= cost
+                # post-release bound (Shreedhar & Varghese): the residual
+                # deficit is below one weighted quantum, or the ring is
+                # banking unearned priority
+                _check_drr_release(self._deficit[tenant],
+                                   self.quantum_items,
+                                   self._weight(tenant), tenant)
                 if not q:
                     self._ring.pop(self._cursor)
                     self._deficit[tenant] = 0.0

@@ -302,6 +302,7 @@ def _subset_sum_dp(pruned: np.ndarray, perf_b_req: np.ndarray,
             cur = pruned[lvl[j], j]
             up = pruned[lvl[j] - 1, j]
             nl = cur - up
+            # detlint: ok[DET003] DP loss heap, not an event queue: slot 1 is the unique node index j, so ties are impossible
             heapq.heappush(heap, (nl - (cur - perf_b_req[j]), j, nl))
     return np.array(lvl, dtype=int)
 

@@ -22,6 +22,12 @@ from typing import List
 
 import numpy as np
 
+from repro.analysis import sanitize
+
+# REPRO_SANITIZE=1 arms the conservation postcondition; otherwise this
+# is the shared no-op and the hot path pays one dead call
+_check_conservation = sanitize.hook(sanitize.check_split_conservation)
+
 
 def quantized_batch_split(state, avail_idx: np.ndarray,
                           levels: np.ndarray, shares: np.ndarray,
@@ -74,4 +80,5 @@ def quantized_batch_split(state, avail_idx: np.ndarray,
                 best, best_t = j, t
         base[best] += chunk
         leftover -= chunk
+    _check_conservation(base, num_items, q)
     return base

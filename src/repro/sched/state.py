@@ -112,6 +112,7 @@ class ClusterState:
             idx = np.array([j for j, a in enumerate(self.available) if a],
                            dtype=int)
             idx.flags.writeable = False
+            # detlint: ok[DET004] memo-cache fill: value is a pure function of frozen fields, identical on any interleaving
             object.__setattr__(self, "_avail_idx", idx)
         return idx
 
@@ -122,6 +123,7 @@ class ClusterState:
         pruned = self.__dict__.get("_avail_perf")
         if pruned is None:
             pruned = self.perf[:, self.avail_idx]
+            # detlint: ok[DET004] memo-cache fill: value is a pure function of frozen fields, identical on any interleaving
             object.__setattr__(self, "_avail_perf", pruned)
         return pruned
 
@@ -155,6 +157,7 @@ class ClusterState:
             eff = np.asarray(interp_throughput(
                 self.perf_b, self.batch_grid, self.max_batch))
             eff.flags.writeable = False
+            # detlint: ok[DET004] memo-cache fill: value is a pure function of frozen fields, identical on any interleaving
             object.__setattr__(self, "_eff_perf", eff)
         return eff
 
@@ -166,6 +169,7 @@ class ClusterState:
         pruned = self.__dict__.get("_avail_eff_perf")
         if pruned is None:
             pruned = self.eff_perf[:, self.avail_idx]
+            # detlint: ok[DET004] memo-cache fill: value is a pure function of frozen fields, identical on any interleaving
             object.__setattr__(self, "_avail_eff_perf", pruned)
         return pruned
 
@@ -287,6 +291,9 @@ class SnapshotCache:
             perf_version=(self._cache_id, self._epoch),
             perf_b=self._perf_b, batch_grid=table.batch_grid,
             max_batch=max_batch)
+        # __post_init__-equivalent construction: the fresh state has not
+        # escaped yet, so pre-seeding its memo fields here is invisible
+        # to every consumer (DET004 allowlists SnapshotCache.snapshot)
         object.__setattr__(state, "_avail_idx", self._avail_idx)
         if max_batch > 1:
             eff = self._eff.get(max_batch)

@@ -45,6 +45,7 @@ import itertools
 import time
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis import sanitize as _sanitize
 from repro.control.admission import (ADMIT, DEGRADE, REJECT,
                                      AdmissionController)
 from repro.control.autoscaler import RETIRE, SPAWN, Autoscaler, ScalingAction
@@ -421,11 +422,20 @@ class OnlineSimulator:
                  max_batch: Optional[int] = None,
                  formation_window_s: float = 0.0,
                  tenant_batch_cap: int = 0,
-                 event_queue: Optional[EventQueue] = None):
+                 event_queue: Optional[EventQueue] = None,
+                 sanitize: Optional[bool] = None):
         self.gn = gn
         self.backend = gn.backend
         self.admission = admission
         self.autoscaler = autoscaler
+        # runtime sanitizer: None adopts the REPRO_SANITIZE env default
+        # (read once at import); True/False forces the simulator-side
+        # checks per instance. The checks are pure asserts over values
+        # already computed — arming them cannot change behaviour, only
+        # crash earlier (tier-1 proves goldens stay byte-identical).
+        self.sanitize = (_sanitize.ENABLED if sanitize is None
+                         else bool(sanitize))
+        self._san_last: Tuple[float, int] = (float("-inf"), -1)
         # multi-tenant fair scheduler in front of the gate: arrivals
         # queue per tenant and reach the gate in DRR order. None (the
         # default) is the pre-tenancy arrival->gate fast path, untouched.
@@ -500,7 +510,7 @@ class OnlineSimulator:
     def run(self) -> SimReport:
         if not self.gn._profiled:
             self.gn.startup()
-        t0 = time.perf_counter()
+        t0 = time.perf_counter()  # detlint: ok[DET001] wall_s telemetry only; excluded from the golden digests
         n_events = 0
         while self.events:
             self.process_next()
@@ -518,13 +528,21 @@ class OnlineSimulator:
                                            if self.admission else {}),
                          end_s=self.clock.now,
                          n_events=n_events,
-                         wall_s=time.perf_counter() - t0)
+                         wall_s=time.perf_counter() - t0)  # detlint: ok[DET001] wall_s telemetry only; excluded from the golden digests
 
     def process_next(self) -> SimEvent:
         """Pop and handle the earliest scheduled event. ``run()`` is this
         in a loop; the sharded root calls it directly so it can merge
         many cells' queues into one global (time, seq) order."""
         ev = self.events.pop()
+        if self.sanitize:
+            # (time, seq) must strictly follow the previous event: this
+            # catches both a backwards clock and a duplicated/reused seq
+            # (which would break the sharded merge loop's total order)
+            assert (ev.time, ev.seq) > self._san_last, (
+                f"event order violated: ({ev.time}, {ev.seq}) after "
+                f"{self._san_last}")
+            self._san_last = (ev.time, ev.seq)
         self.clock.advance_to(ev.time)
         self._handle(ev)
         return ev
@@ -919,6 +937,8 @@ class OnlineSimulator:
             if share.start_s < 0:
                 share.start_s = now
         nq.claim(op.takes, self._share_pred)
+        if self.sanitize:
+            _sanitize.check_op_conservation(op, self.batching.max_batch)
         nq.active = op
         self.events.push(op.finish_s, "batch_done", node=nq.name,
                          op_id=op.op_id)

@@ -1,6 +1,15 @@
-import jax
-import numpy as np
-import pytest
+import os
+
+# Arm the runtime sanitizer for the whole tier-1 suite unless the caller
+# pinned it explicitly. conftest is imported before any test module (and
+# so before any repro module reads the flag at import), which is what
+# makes the default stick. The golden-digest tests then double as the
+# proof that the sanitizer observes without perturbing.
+os.environ.setdefault("REPRO_SANITIZE", "1")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 CPU device;
 # only launch/dryrun.py forces 512 placeholder devices (in its own process).

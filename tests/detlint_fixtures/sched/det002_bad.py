@@ -1,0 +1,18 @@
+"""DET002 bad fixture: hash-ordered iteration feeding ordered output."""
+
+
+def assembly_order(names):
+    pending = set(names)
+    return [n for n in pending]
+
+
+def total_backlog(backlogs: dict, dead: set) -> float:
+    alive = {n for n in backlogs} - dead
+    total = 0.0
+    for name in alive:
+        total += backlogs[name]
+    return total
+
+
+def first_levels(levels):
+    return list({lv for lv in levels})

@@ -1,0 +1,18 @@
+"""DET002 good twin: sorted() wraps, or genuinely order-free reads."""
+
+
+def assembly_order(names):
+    pending = set(names)
+    return [n for n in sorted(pending)]
+
+
+def total_backlog(backlogs: dict, dead: set) -> float:
+    alive = {n for n in backlogs} - dead
+    total = 0.0
+    for name in sorted(alive):
+        total += backlogs[name]
+    return total
+
+
+def is_served(name, serving: set) -> bool:
+    return name in serving and len(serving) > 0

@@ -1,0 +1,18 @@
+"""DET004 bad fixture: mutating frozen snapshot/plan instances."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    makespan_s: float = 0.0
+
+
+def retarget(plan: Plan, new_s: float):
+    object.__setattr__(plan, "makespan_s", new_s)
+    return plan
+
+
+def build_and_patch():
+    p = Plan()
+    p.makespan_s = 1.0
+    return p

@@ -1,0 +1,15 @@
+"""DET004 good twin: derive-don't-mutate, writes only in __post_init__."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    makespan_s: float = 0.0
+
+    def __post_init__(self):
+        # normalization during construction is the sanctioned use
+        object.__setattr__(self, "makespan_s", float(self.makespan_s))
+
+
+def retarget(plan: Plan, new_s: float) -> Plan:
+    return dataclasses.replace(plan, makespan_s=new_s)

@@ -1,0 +1,11 @@
+"""DET006 bad fixture: identity / hash-order tie-breaks in ranking."""
+
+
+def pick_node(nodes):
+    ranked = sorted(nodes, key=lambda n: (n.backlog_s, id(n)))
+    return ranked[0]
+
+
+def least_loaded(loads: dict, serving_names):
+    serving = set(serving_names)
+    return min(serving, key=lambda n: loads[n])

@@ -1,0 +1,11 @@
+"""DET006 good twin: semantic tie-breaks (index / name), stable order."""
+
+
+def pick_node(nodes):
+    ranked = sorted(nodes, key=lambda n: (n.backlog_s, n.index))
+    return ranked[0]
+
+
+def least_loaded(loads: dict, serving_names):
+    serving = sorted(set(serving_names))
+    return min(serving, key=lambda n: loads[n])

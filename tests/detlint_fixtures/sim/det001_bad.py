@@ -1,0 +1,21 @@
+"""DET001 bad fixture: wall-clock and ambient entropy in sim scope.
+
+Never imported — analyzed as source by tests/test_detlint.py.
+"""
+import os
+import random
+import time
+
+import numpy as np
+
+
+def stamp_arrival(request) -> float:
+    return time.time()
+
+
+def jitter() -> float:
+    return random.random() + float(np.random.uniform())
+
+
+def token() -> bytes:
+    return os.urandom(8)

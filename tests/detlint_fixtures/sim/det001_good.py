@@ -1,0 +1,15 @@
+"""DET001 good twin: simulated clock + explicit seeded generators."""
+import numpy as np
+
+
+def stamp_arrival(clock, request) -> float:
+    return clock.now
+
+
+def jitter(seed: int) -> float:
+    rng = np.random.default_rng(seed)
+    return float(rng.uniform())
+
+
+def token(rng) -> bytes:
+    return rng.bytes(8)

@@ -1,0 +1,10 @@
+"""DET003 bad fixture: raw (time, ...) tuple push onto an event heap."""
+import heapq
+
+
+def schedule(heap, time_s: float, payload: dict):
+    heapq.heappush(heap, (time_s, payload))
+
+
+def reschedule(heap, time_s: float, payload: dict):
+    heapq.heapreplace(heap, (time_s, payload))

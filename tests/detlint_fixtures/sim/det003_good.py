@@ -1,0 +1,12 @@
+"""DET003 good twin: events go through the SeqCounter-backed queue."""
+import heapq
+
+
+def schedule(queue, time_s: float, **payload):
+    # EventQueue.push assigns the (time, seq) total order internally
+    return queue.push(time_s, "arrival", **payload)
+
+
+def track_scalar(heap, value: float):
+    # plain scalars carry their own total order; no tie-break needed
+    heapq.heappush(heap, value)

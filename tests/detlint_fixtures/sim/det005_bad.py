@@ -1,0 +1,18 @@
+"""DET005 bad fixture: a new sampler draw with no stream guard."""
+
+
+class RequestSampler:
+    def sample(self, rng, rid: int):
+        size = int(rng.integers(1, 64))
+        noise = float(rng.uniform())
+        return rid, size, noise
+
+
+class TraceArrivals:
+    def generate(self, rng, horizon_s: float):
+        out = []
+        t = 0.0
+        while t < horizon_s:
+            t += float(rng.exponential(0.5))
+            out.append(t)
+        return out

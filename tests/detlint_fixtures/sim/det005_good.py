@@ -1,0 +1,23 @@
+"""DET005 good twin: every draw carries a stream-compatibility guard."""
+
+
+class RequestSampler:
+    def sample(self, rng, rid: int):
+        # detlint: ok[DET005] pre-tenancy draw; order and count pinned by the golden digests
+        size = int(rng.integers(1, 64))
+        noise = 0.0
+        if rid > 0:
+            # detlint: ok[DET005] guarded: only reached with >= 2 TenantSpecs, 0/1-spec streams never consume it
+            noise = float(rng.uniform())
+        return rid, size, noise
+
+
+class TraceArrivals:
+    def generate(self, rng, horizon_s: float):
+        out = []
+        t = 0.0
+        while t < horizon_s:
+            # detlint: ok[DET005] inter-arrival draw is tenant-independent; pinned by the golden digests
+            t += float(rng.exponential(0.5))
+            out.append(t)
+        return out

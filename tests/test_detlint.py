@@ -1,0 +1,266 @@
+"""detlint self-tests: fixture pairs per checker, suppression semantics,
+the baseline ratchet, the CLI, and the runtime sanitizer hooks.
+
+The fixture files under ``tests/detlint_fixtures/`` are never imported —
+they are analyzed as source. Each checker has a bad snippet that must be
+flagged with exactly its code and a good twin that must come back clean;
+the pair IS the rule's executable specification.
+"""
+import os
+import types
+
+import pytest
+
+from repro.analysis import sanitize
+from repro.analysis.baseline import read_baseline, write_baseline
+from repro.analysis.checkers import ALL_CHECKERS
+from repro.analysis.core import Finding, SuppressionIndex
+from repro.analysis.detlint import main as detlint_main
+from repro.analysis.runner import (analyze_file, analyze_paths,
+                                   partition_against_baseline)
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+REPO_ROOT = os.path.dirname(TESTS_DIR)
+FIXTURES = os.path.join(TESTS_DIR, "detlint_fixtures")
+
+# code -> fixture subdirectory (the rules are scoped to sim/sched/control
+# path components, so the fixtures live under matching directory names)
+FIXTURE_DIRS = {
+    "DET001": "sim", "DET002": "sched", "DET003": "sim",
+    "DET004": "sched", "DET005": "sim", "DET006": "sched",
+}
+ALL_CODES = sorted(FIXTURE_DIRS)
+
+
+def _fixture(code: str, kind: str) -> str:
+    return os.path.join(FIXTURES, FIXTURE_DIRS[code],
+                        f"{code.lower()}_{kind}.py")
+
+
+# ---- fixture pairs ----------------------------------------------------
+def test_every_checker_has_a_fixture_pair():
+    assert sorted(c.code for c in ALL_CHECKERS) == ALL_CODES
+    for code in ALL_CODES:
+        assert os.path.exists(_fixture(code, "bad")), code
+        assert os.path.exists(_fixture(code, "good")), code
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_bad_fixture_flagged_with_its_code(code):
+    findings = analyze_file(_fixture(code, "bad"))
+    assert findings, f"{code} bad fixture produced no findings"
+    assert {f.code for f in findings} == {code}, \
+        [f.format(show_hint=False) for f in findings]
+
+
+@pytest.mark.parametrize("code", ALL_CODES)
+def test_good_twin_clean(code):
+    findings = analyze_file(_fixture(code, "good"))
+    assert findings == [], \
+        [f.format(show_hint=False) for f in findings]
+
+
+def test_scope_excludes_non_control_plane_paths(tmp_path):
+    """The same wall-clock call outside sim/sched/control is not a
+    finding: kernels/launch code may read the host clock freely."""
+    kernels = tmp_path / "kernels"
+    kernels.mkdir()
+    path = kernels / "timing.py"
+    path.write_text("import time\n\ndef t():\n    return time.time()\n")
+    assert analyze_file(str(path)) == []
+
+
+# ---- suppression semantics -------------------------------------------
+def test_inline_suppression_with_reason(tmp_path):
+    sim = tmp_path / "sim"
+    sim.mkdir()
+    path = sim / "mod.py"
+    path.write_text(
+        "import time\n\n"
+        "def t():\n"
+        "    return time.time()  "
+        "# detlint: ok[DET001] telemetry, excluded from digests\n")
+    assert analyze_file(str(path)) == []
+
+
+def test_standalone_suppression_covers_next_line(tmp_path):
+    sim = tmp_path / "sim"
+    sim.mkdir()
+    path = sim / "mod.py"
+    path.write_text(
+        "import time\n\n"
+        "def t():\n"
+        "    # detlint: ok[DET001] telemetry, excluded from digests\n"
+        "    return time.time()\n")
+    assert analyze_file(str(path)) == []
+
+
+def test_suppression_for_wrong_code_does_not_cover(tmp_path):
+    sim = tmp_path / "sim"
+    sim.mkdir()
+    path = sim / "mod.py"
+    path.write_text(
+        "import time\n\n"
+        "def t():\n"
+        "    return time.time()  # detlint: ok[DET003] wrong code\n")
+    findings = analyze_file(str(path))
+    assert [f.code for f in findings] == ["DET001"]
+
+
+def test_suppression_without_reason_is_det000(tmp_path):
+    sim = tmp_path / "sim"
+    sim.mkdir()
+    path = sim / "mod.py"
+    path.write_text(
+        "import time\n\n"
+        "def t():\n"
+        "    return time.time()  # detlint: ok[DET001]\n")
+    codes = sorted(f.code for f in analyze_file(str(path)))
+    # the bare suppression is malformed (DET000) and does NOT silence
+    # the underlying finding
+    assert codes == ["DET000", "DET001"]
+
+
+def test_suppression_index_parses_reasons():
+    idx = SuppressionIndex(
+        "x = 1  # detlint: ok[DET002] hash order is fine here\n",
+        "sim/x.py")
+    assert idx.covers(1, "DET002")
+    assert not idx.covers(1, "DET001")
+    assert idx.malformed == []
+
+
+# ---- baseline ratchet -------------------------------------------------
+def _finding(path="src/repro/sim/x.py", line=3, code="DET001"):
+    return Finding(path=path, line=line, col=1, code=code, message="m")
+
+
+def test_baseline_partition_new_and_stale():
+    findings = [_finding(line=3), _finding(line=9, code="DET002")]
+    baseline = [findings[0].baseline_key,
+                "src/repro/sim/gone.py::DET004::1"]
+    new, stale = partition_against_baseline(findings, baseline)
+    assert [f.baseline_key for f in new] == [findings[1].baseline_key]
+    assert stale == ["src/repro/sim/gone.py::DET004::1"]
+
+
+def test_baseline_roundtrip(tmp_path):
+    path = str(tmp_path / "baseline.txt")
+    findings = [_finding(), _finding(line=9, code="DET002")]
+    write_baseline(path, findings)
+    keys = read_baseline(path)
+    assert keys == sorted(f.baseline_key for f in findings)
+    new, stale = partition_against_baseline(findings, keys)
+    assert new == [] and stale == []
+
+
+def test_committed_baseline_is_empty():
+    """The ratchet's end state: no accepted findings — violations are
+    fixed or justified inline, never parked."""
+    assert read_baseline(os.path.join(TESTS_DIR,
+                                      "detlint_baseline.txt")) == []
+
+
+def test_repo_tree_is_clean():
+    """The acceptance bar: detlint over src/repro has zero findings
+    (inline suppressions only)."""
+    findings = analyze_paths([os.path.join(REPO_ROOT, "src", "repro")],
+                             jobs=1)
+    assert findings == [], \
+        [f.format(show_hint=False) for f in findings]
+
+
+# ---- CLI --------------------------------------------------------------
+def test_cli_exit_codes(tmp_path, capsys):
+    assert detlint_main([_fixture("DET001", "good")]) == 0
+    assert detlint_main([_fixture("DET001", "bad")]) == 1
+    out = capsys.readouterr().out
+    assert "DET001" in out
+
+    # a baseline accepting the current findings makes the run green ...
+    baseline = str(tmp_path / "baseline.txt")
+    assert detlint_main([_fixture("DET001", "bad"), "--baseline",
+                         baseline, "--update-baseline"]) == 0
+    assert detlint_main([_fixture("DET001", "bad"),
+                         "--baseline", baseline]) == 0
+    # ... and turns stale (failing) once the findings disappear
+    assert detlint_main([_fixture("DET001", "good"),
+                         "--baseline", baseline]) == 1
+    assert "stale" in capsys.readouterr().out
+
+
+def test_cli_list_rules(capsys):
+    assert detlint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ALL_CODES:
+        assert code in out
+
+
+# ---- runtime sanitizer ------------------------------------------------
+def test_sanitizer_armed_in_tier1():
+    """conftest defaults REPRO_SANITIZE=1 before any repro import, so
+    the whole tier-1 suite (golden digests included) runs sanitized."""
+    expected = os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+    assert sanitize.ENABLED is expected
+    assert sanitize.hook(len) is (len if expected else sanitize._noop)
+
+
+def test_split_conservation_check():
+    sanitize.check_split_conservation([8, 8, 3], 19, 8)
+    with pytest.raises(AssertionError, match="lost items"):
+        sanitize.check_split_conservation([8, 8], 19, 8)
+    with pytest.raises(AssertionError, match="negative"):
+        sanitize.check_split_conservation([27, -8], 19, 8)
+    with pytest.raises(AssertionError, match="partial engine batches"):
+        sanitize.check_split_conservation([7, 7, 5], 19, 8)
+
+
+def test_op_conservation_check():
+    # called after claim: the share's unclaimed no longer holds the take
+    share = types.SimpleNamespace(unclaimed=0)
+    op = types.SimpleNamespace(op_id=1, n_items=6, batch_size=6,
+                               takes=[(share, 6)])
+    sanitize.check_op_conservation(op, max_batch=8)
+    op.n_items = 7
+    with pytest.raises(AssertionError, match="takes sum"):
+        sanitize.check_op_conservation(op, max_batch=8)
+    op.n_items = 6
+    op.batch_size = 9
+    with pytest.raises(AssertionError, match="priced batch"):
+        sanitize.check_op_conservation(op, max_batch=8)
+
+
+def test_drr_and_bucket_checks():
+    sanitize.check_drr_release(10.0, 1024, 1.0, "acme")
+    with pytest.raises(AssertionError, match="deficit"):
+        sanitize.check_drr_release(2000.0, 1024, 1.0, "acme")
+    with pytest.raises(AssertionError, match="deficit"):
+        sanitize.check_drr_release(-1.0, 1024, 1.0, "acme")
+    sanitize.check_bucket(0.0, 8.0)
+    with pytest.raises(AssertionError, match="bucket"):
+        sanitize.check_bucket(-0.5, 8.0)
+    with pytest.raises(AssertionError, match="bucket"):
+        sanitize.check_bucket(9.0, 8.0)
+    sanitize.check_outstanding({"a": 3, "b": 0}, 3)
+    with pytest.raises(AssertionError, match="drifted"):
+        sanitize.check_outstanding({"a": 3}, 4)
+
+
+def test_simulator_event_order_sanitizer():
+    """A duplicated (time, seq) pair — the exact failure mode a raw
+    heappush / shared-counter bug produces — trips the per-event check."""
+    from repro.sim.events import EventQueue
+    from repro.sim.simulator import OnlineSimulator
+
+    events = EventQueue()
+    events.push(1.0, "arrival", _seq=7)
+    events.push(1.0, "arrival", _seq=7)          # forged duplicate
+    sim = OnlineSimulator.__new__(OnlineSimulator)
+    sim.sanitize = True
+    sim._san_last = (float("-inf"), -1)
+    sim.events = events
+    sim.clock = types.SimpleNamespace(advance_to=lambda t: None)
+    sim._handle = lambda ev: None
+    sim.process_next()
+    with pytest.raises(AssertionError, match="event order"):
+        sim.process_next()
