@@ -27,6 +27,15 @@ Sections:
     hard cells=1 identity assert, end-to-end speedups, and a cProfile of
     the biggest sharded run showing the root router's share of the event
     loop. The committed ``BENCH_6.json`` anchors this section.
+  * merge (``--merge`` / ``--merge-json`` / ``--check-merge``) — PR 9's
+    hot paths: the run-draining root merge vs the per-event reference
+    merge (``run`` vs ``run_reference``) at fleet-1024/cells=16 with a
+    hard event-stream identity assert and a root-overhead cProfile
+    digest, plus the fused oracle residue vs the pre-PR mask -> argmax
+    chain on a dominated-pruned grid past ``max_enum_nodes``. The
+    committed ``BENCH_8.json`` anchors this section; the gate also
+    enforces the absolute PR 9 bars (merge >= 1.3x, oracle >= 2x, root
+    overhead < 8% of CPU).
 
 ``--json`` writes the compact trajectory file; the committed
 ``BENCH_4.json`` at the repo root is the anchor. ``--check ANCHOR``
@@ -73,6 +82,7 @@ ARCH = "phi4-mini-3.8b"
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_ANCHOR = os.path.join(REPO_ROOT, "BENCH_4.json")
 BENCH_CELLS = os.path.join(REPO_ROOT, "BENCH_6.json")
+BENCH_MERGE = os.path.join(REPO_ROOT, "BENCH_8.json")
 PLAN_POLICIES = ("uniform", "uniform_apx", "asymmetric", "proportional")
 CELL_COUNTS = (1, 4, 16)
 # version stamp on every anchor this tool writes; the --check gates
@@ -302,8 +312,16 @@ def _profile_root_overhead(profile) -> dict:
     top = []
     for (fn, _line, name), (_cc, _nc, tt, ct, _callers) in st.stats.items():
         base = os.path.basename(fn)
+        # the root layer = the merge loop itself (sharded.py), the
+        # router (shard.py), and the queue-head reads it drives
+        # (events.py peek/peek_key/push_chunk). process_run lives in
+        # simulator.py and is *not* root overhead: it pops and handles
+        # events exactly as the unsharded process_next would — the
+        # merge's job is deciding which cell runs, and that is what
+        # this fraction measures.
         if (base == "sharded.py" or base == "shard.py"
-                or (base == "events.py" and name == "peek")):
+                or (base == "events.py"
+                    and name in ("peek", "peek_key", "push_chunk"))):
             root_tt += tt
         top.append((tt, ct, f"{base}:{name}"))
     top.sort(reverse=True)
@@ -439,6 +457,214 @@ def check_cells_regression(result: dict, anchor_path: str,
     return 0
 
 
+def _merge_stream(sim, rep):
+    """Everything the merge order can influence (mirrors
+    tests/test_merge_property.py): record fields, log, event count,
+    routing decisions."""
+    records = [(r.request.rid, r.arrival_s, r.dispatch_s, r.finish_s,
+                r.done, r.rejected, r.redistributed,
+                r.result.per_node_time if r.done else None)
+               for r in rep.records]
+    return (records, rep.log, rep.n_events, rep.end_s,
+            sorted(sim.routed_cell.items()))
+
+
+def bench_merge(seed: int, fleet: int = 1024, cells: int = 16,
+                oracle_plans: int = 300) -> dict:
+    """PR 9's two hot paths, each against its retained pre-optimization
+    twin on identical inputs:
+
+    * **root merge**: the fleet trace through ``ShardedSimulator`` at
+      ``cells`` with the run-draining loop (``run``) vs the per-event
+      reference merge (``run_reference``) — event streams asserted
+      identical (records, log, n_events, routing), then events/sec
+      compared; plus a separate cProfile of the draining run digesting
+      the root layer's share of CPU (``_profile_root_overhead``).
+    * **oracle residue**: plans/sec on a dominated-pruned grid *past*
+      ``max_enum_nodes`` (the regime the enumeration cache exists for),
+      fused quality-order first-hit scan vs the pre-PR per-plan
+      mask -> masked-argmax chain re-created here over the same cached
+      tensors and the same plan assembly — levels asserted identical
+      on every request.
+    """
+    profiles = synthetic_fleet(fleet, seed=seed)
+
+    def factory(ps):
+        return ProfilingTable(_pool(), ps, seq_len=512)
+
+    table = factory(profiles)
+    sc = build_scenario(f"fleet-{fleet}", table, seed=seed)
+
+    def sharded():
+        return ShardedSimulator(factory, profiles, sc.arrivals, sc.faults,
+                                cells=cells, policy="proportional",
+                                seed=seed, scenario=sc.name,
+                                horizon_s=sc.horizon_s)
+
+    fast_sim = sharded()
+    fast = fast_sim.run()
+    ref_sim = sharded()
+    ref = ref_sim.run_reference()
+    assert _merge_stream(fast_sim, fast) == _merge_stream(ref_sim, ref), (
+        "run-draining merge diverged from the per-event reference merge "
+        "— the speedup does not count if the event stream moved")
+    eps_fast = fast.n_events / max(fast.wall_s, 1e-9)
+    eps_ref = ref.n_events / max(ref.wall_s, 1e-9)
+
+    # root-layer CPU share of the draining run (separate pass so
+    # cProfile overhead never touches the timed numbers above)
+    import cProfile
+    prof_sim = sharded()
+    prof = cProfile.Profile()
+    prof.enable()
+    prof_sim.run()
+    prof.disable()
+
+    result = {
+        "scenario": f"fleet-{fleet}", "cells": cells,
+        "merge": {
+            "events": int(fast.n_events),
+            "events_per_sec": round(eps_fast, 1),
+            "reference_events_per_sec": round(eps_ref, 1),
+            "speedup": round(eps_fast / eps_ref, 2),
+            "stream_identical": True,
+        },
+        "profile": _profile_root_overhead(prof),
+    }
+
+    # ---- oracle residue past max_enum_nodes ---------------------------
+    pol = get_policy("exact_oracle")
+    n = pol.max_enum_nodes + 2
+    m = len(_pool())
+    rng = np.random.default_rng(seed + 3)
+    caps = rng.uniform(40.0, 120.0, n)
+    # duplicate ladder rows -> 4 non-dominated levels per node: the
+    # pruned grid (4^9 = 262144 combos) stays under max_enum_combos, so
+    # the oracle enumerates exactly instead of falling back
+    speed = np.array([1.0, 1.2, 1.2, 1.5, 1.8, 1.8][:m])
+    measured = caps[None, :] * speed[:, None]
+    from repro.core.profiling import NodeProfile
+    otable = ProfilingTable(
+        _pool(), [NodeProfile(f"n{i}", chips=1) for i in range(n)],
+        measured=measured)
+    state = SnapshotCache().snapshot(otable, now=0.0)
+    lo = float(measured[-1].sum())
+    hi = float(measured[0].sum())
+    from repro.core.requests import InferenceRequest
+    reqs = [InferenceRequest(rid=i, num_items=260,
+                             perf_req=float(rng.uniform(0.5 * lo, hi)),
+                             acc_req=0.0)
+            for i in range(64)]
+    warm = pol.plan(state, reqs[0])
+    assert warm.meta.get("enum") == "dominated_pruned", warm.meta
+
+    # the pre-PR per-plan residue, re-created verbatim over the same
+    # cached tensors (mask -> masked wacc argmax -> total tie-break ->
+    # first index) and the same _mk_plan assembly — so the comparison
+    # times exactly the work this PR fused, nothing else
+    from repro.sched.policies import (_avail, _mk_plan,
+                                      _non_dominated_levels)
+    idx = _avail(state)
+    pruned = state.available_eff_perf
+    cands = _non_dominated_levels(pruned)
+    grids = np.meshgrid(*cands, indexing="ij")
+    combos = np.stack([g.reshape(-1) for g in grids], axis=1)
+    perfs = pruned[combos, np.arange(n)[None, :]]
+    total = perfs.sum(axis=1)
+    wacc = (perfs * state.accuracies[combos]).sum(axis=1) / total
+    meta = {"enum": "dominated_pruned", "n": n}
+
+    def pre_pr_plan(request):
+        feasible = total >= request.perf_req * 1.02
+        if feasible.any():
+            cand = np.flatnonzero(feasible)
+            w = wacc[cand]
+            sel = cand[w == w.max()]
+            best = int(sel[np.argmax(total[sel])])
+        else:
+            best = int(np.argmax(total))
+        return _mk_plan(state, request, idx, combos[best].astype(int),
+                        "exact_oracle", meta=meta)
+
+    for r in reqs:                       # identity before speed
+        a, b = pol.plan(state, r), pre_pr_plan(r)
+        assert a.dispatch.assignments == b.dispatch.assignments, r.rid
+
+    fast_pps = _time_plans(pol, state, reqs, oracle_plans)
+    t0 = time.perf_counter()
+    pre_iters = max(oracle_plans // 4, 50)
+    for i in range(pre_iters):
+        pre_pr_plan(reqs[i % len(reqs)])
+    pre_pps = pre_iters / (time.perf_counter() - t0)
+    result["oracle"] = {
+        "grid": f"{n} nodes x {len(cands[0])} pruned levels "
+                f"({len(combos)} combos)",
+        "plans_per_sec": round(fast_pps, 1),
+        "pre_pr_plans_per_sec": round(pre_pps, 1),
+        "speedup": round(fast_pps / pre_pps, 2),
+    }
+    return result
+
+
+# absolute acceptance bars for the merge section (PR 9): run-draining
+# must beat the per-event merge by >= 1.3x at fleet-1024/cells=16, the
+# root layer must stay under 8% of CPU, and the fused oracle residue
+# must be >= 2x the pre-PR chain — whatever the anchor drifted to
+MERGE_MIN_SPEEDUP = 1.3
+MERGE_MAX_ROOT_FRAC = 0.08
+ORACLE_MIN_SPEEDUP = 2.0
+
+
+def check_merge_regression(result: dict, anchor_path: str,
+                           tolerance: float) -> int:
+    """Gate for the merge/oracle section (BENCH_8 anchor): the event
+    stream identity must hold (hard requirement), the merge and oracle
+    speedups must not shrink more than ``tolerance`` vs the anchor
+    (speedup-normalized — same-process ratios track code, not host
+    speed), and the absolute PR 9 acceptance bars apply on top."""
+    anchor, err = load_anchor(anchor_path)
+    if err:
+        print(f"merge check FAILED: {err}", file=sys.stderr)
+        return 1
+    failures = []
+    if not result["merge"].get("stream_identical"):
+        failures.append("run-draining event stream no longer matches "
+                        "the per-event reference merge")
+    for section, bar in (("merge", MERGE_MIN_SPEEDUP),
+                         ("oracle", ORACLE_MIN_SPEEDUP)):
+        fresh = result[section]["speedup"]
+        base = anchor.get(section, {}).get("speedup")
+        if base and fresh < base * (1.0 - tolerance):
+            failures.append(
+                f"{section} speedup {fresh:.2f}x < "
+                f"{(1 - tolerance):.0%} of anchor {base:.2f}x")
+        # the absolute bar gets the same host-noise allowance as the
+        # anchor comparison: the committed BENCH_8.json must clear the
+        # bar outright, a CI rerun only has to stay within tolerance
+        if fresh < bar * (1.0 - tolerance):
+            failures.append(
+                f"{section} speedup {fresh:.2f}x below the {bar:.1f}x "
+                f"acceptance bar (with {tolerance:.0%} tolerance)")
+    frac = result["profile"]["root_overhead_frac"]
+    if frac > MERGE_MAX_ROOT_FRAC * (1.0 + tolerance):
+        failures.append(
+            f"root merge overhead {frac:.1%} of CPU above the "
+            f"{MERGE_MAX_ROOT_FRAC:.0%} acceptance bar "
+            f"(with {tolerance:.0%} tolerance)")
+    if failures:
+        print("merge/oracle perf REGRESSION vs "
+              f"{os.path.basename(anchor_path)}:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"merge check OK vs {os.path.basename(anchor_path)} "
+          f"(tolerance {tolerance:.0%}; merge "
+          f"{result['merge']['speedup']:.2f}x, oracle "
+          f"{result['oracle']['speedup']:.2f}x, root "
+          f"{frac:.1%} of CPU)", file=sys.stderr)
+    return 0
+
+
 def check_regression(result: dict, anchor_path: str,
                      tolerance: float) -> int:
     """Exit status 1 when plans/sec or events/sec regressed > tolerance
@@ -539,6 +765,27 @@ def main(argv=None) -> int:
                     help="compare the sharded section against this "
                          "anchor (BENCH_6.json) and fail on regression "
                          "or a broken cells=1 identity; implies --cells")
+    ap.add_argument("--merge", action="store_true",
+                    help="also run the merge/oracle section (PR 9: "
+                         "run-draining root merge vs the per-event "
+                         "reference at fleet-1024/cells=16, and the "
+                         "fused oracle residue past max_enum_nodes)")
+    ap.add_argument("--merge-fleet", type=int, default=1024,
+                    help="fleet size for the merge section (the PR "
+                         "perf-label job runs a reduced 256-node shape)")
+    ap.add_argument("--merge-plans", type=int, default=300,
+                    help="oracle plans per timing loop in the merge "
+                         "section")
+    ap.add_argument("--merge-json", nargs="?", const=BENCH_MERGE,
+                    default="",
+                    help="write the merge section's trajectory JSON "
+                         f"(default path: {os.path.basename(BENCH_MERGE)} "
+                         "at the repo root); implies --merge")
+    ap.add_argument("--check-merge", default="",
+                    help="compare the merge section against this anchor "
+                         "(BENCH_8.json) and fail on regression, a "
+                         "broken stream identity, or a missed absolute "
+                         "acceptance bar; implies --merge")
     args = ap.parse_args(argv)
 
     result = {"bench": "bench_sched", "schema_version": SCHEMA_VERSION,
@@ -613,6 +860,28 @@ def main(argv=None) -> int:
               f"{pr['total_cpu_s']:.1f}s CPU at cells="
               f"{max(CELL_COUNTS)}")
 
+    merge_result = None
+    if args.merge or args.merge_json or args.check_merge:
+        print(f"# root merge + oracle residue (fleet-{args.merge_fleet}, "
+              "cells=16, run-draining vs per-event reference)")
+        merge_result = {"bench": "bench_sched_merge",
+                        "schema_version": SCHEMA_VERSION, "arch": ARCH,
+                        "seed": args.seed, "fleet": args.merge_fleet}
+        merge_result.update(bench_merge(args.seed, fleet=args.merge_fleet,
+                                        oracle_plans=args.merge_plans))
+        mg = merge_result["merge"]
+        print(f"  merge: {mg['events']} events, "
+              f"{mg['events_per_sec']:.0f} ev/s draining vs "
+              f"{mg['reference_events_per_sec']:.0f} ev/s per-event "
+              f"({mg['speedup']:.2f}x, stream identical)")
+        pr = merge_result["profile"]
+        print(f"  root overhead: {pr['root_overhead_frac']:.1%} of "
+              f"{pr['total_cpu_s']:.1f}s CPU")
+        og = merge_result["oracle"]
+        print(f"  oracle [{og['grid']}]: {og['plans_per_sec']:.0f} "
+              f"plans/s fused vs {og['pre_pr_plans_per_sec']:.0f} "
+              f"pre-PR ({og['speedup']:.2f}x)")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2, sort_keys=True)
@@ -623,12 +892,20 @@ def main(argv=None) -> int:
             json.dump(cells_result, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {args.cells_json}", file=sys.stderr)
+    if args.merge_json and merge_result is not None:
+        with open(args.merge_json, "w") as f:
+            json.dump(merge_result, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.merge_json}", file=sys.stderr)
     status = 0
     if args.check:
         status = check_regression(result, args.check, args.tolerance)
     if args.check_cells and cells_result is not None:
         status = max(status, check_cells_regression(
             cells_result, args.check_cells, args.tolerance))
+    if args.check_merge and merge_result is not None:
+        status = max(status, check_merge_regression(
+            merge_result, args.check_merge, args.tolerance))
     return status
 
 

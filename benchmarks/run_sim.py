@@ -176,7 +176,7 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
             cells: int = 0, cell_strategy: str = "stripe",
             router: str = "least-backlog",
             rebalance_s: float = 0.0, fair: bool = False,
-            tenant_batch_cap: int = 0) -> dict:
+            tenant_batch_cap: int = 0, profiler=None) -> dict:
     t_wall = time.perf_counter()
     table = _fresh_table(scenario_name, num_standby, seed, seq_len=seq_len)
     sc = build_scenario(scenario_name, table, seed=seed,
@@ -239,7 +239,14 @@ def run_one(scenario_name: str, policy: str, control: str, *, seed: int,
                               fairshare=fairshare,
                               tenant_batch_cap=tenant_batch_cap,
                               formation_window_s=formation_window_s)
+    # --profile: the event/root loop alone (sim.run), excluding table
+    # builds and trace generation; one shared profiler accumulates
+    # across every swept cell so a sweep profiles like a single run
+    if profiler is not None:
+        profiler.enable()
     report = sim.run()
+    if profiler is not None:
+        profiler.disable()
     summary = report.summary()
     fallbacks = summary.get("plan_fallbacks", 0.0)
     if fallbacks:
@@ -421,6 +428,14 @@ def main(argv=None) -> int:
                          "BENCH_3.json at the repo root). Opt-in so a "
                          "partial dev sweep cannot clobber the "
                          "committed anchor")
+    ap.add_argument("--profile", nargs="?", const="run_sim.prof",
+                    default="",
+                    help="dump a cProfile of the event/root loop "
+                         "(sim.run only — table builds and trace "
+                         "generation excluded) to this file (default: "
+                         "run_sim.prof) and print the top self-time "
+                         "functions; with --cells this profiles the "
+                         "sharded root merge loop")
     ap.add_argument("--verbose", action="store_true",
                     help="print fault/admission/scaling log lines to "
                          "stderr")
@@ -530,6 +545,10 @@ def main(argv=None) -> int:
     if fair_sweep:
         cols = cols + ("fairshare",)
     print(",".join(cols))
+    profiler = None
+    if args.profile:
+        import cProfile
+        profiler = cProfile.Profile()
     rows = []
     for sname in scenario_names:
         horizon = args.horizon
@@ -557,7 +576,8 @@ def main(argv=None) -> int:
                                   router=args.router,
                                   rebalance_s=args.rebalance,
                                   fair=fair,
-                                  tenant_batch_cap=args.tenant_batch_cap)
+                                  tenant_batch_cap=args.tenant_batch_cap,
+                                  profiler=profiler)
                     rows.append(row)
                     out = [
                         row["scenario"], row["policy"], row["control"],
@@ -581,6 +601,21 @@ def main(argv=None) -> int:
                     print(",".join(out))
                     if args.tenants and "tenants" in row:
                         _print_tenants(row)
+    if profiler is not None:
+        import pstats
+        profiler.dump_stats(args.profile)
+        st = pstats.Stats(profiler)
+        entries = sorted(
+            ((tt, ct, f"{os.path.basename(fn)}:{name}")
+             for (fn, _line, name), (_cc, _nc, tt, ct, _callers)
+             in st.stats.items()), reverse=True)
+        total_tt = sum(e[0] for e in entries)
+        print(f"profile: {total_tt:.2f}s CPU in the event loop across "
+              f"{len(rows)} run(s) -> {args.profile} "
+              "(inspect: python -m pstats)", file=sys.stderr)
+        for tt, ct, name in entries[:10]:
+            print(f"  {tt:8.3f}s self  {ct:8.3f}s cum  {name}",
+                  file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"schema_version": SCHEMA_VERSION, "rows": rows},

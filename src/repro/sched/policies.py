@@ -275,6 +275,15 @@ def _subset_sum_dp(pruned: np.ndarray, perf_b_req: np.ndarray,
     O(rounds * n log n) — pinned against the reference by the seeded
     property test. Non-monotone tables (a lift that *gains* throughput
     breaks both invariants) take the reference path.
+
+    The candidate re-checks get the enumeration-tensor treatment: every
+    lift's loss and heap key is precomputed in two vectorized array
+    expressions (same IEEE ops, same order as the per-iteration scalar
+    reads they replace — bit-identical keys, so the pop order cannot
+    move), and the dead-candidate drain carries an early cutoff — once
+    ``total`` drops below what even the globally cheapest lift needs,
+    every remaining heap entry is dead, so the walk stops instead of
+    popping and re-checking each one.
     """
     m, n = pruned.shape
     levels = np.full(n, m - 1, dtype=int)
@@ -286,25 +295,49 @@ def _subset_sum_dp(pruned: np.ndarray, perf_b_req: np.ndarray,
     if not np.all(pruned[1:] >= pruned[:-1]):
         return reference.subset_sum_dp_ref(pruned, perf_b_req, perf_req)
 
-    cur0 = pruned[m - 1]
-    loss0 = cur0 - pruned[m - 2]
-    key0 = loss0 - (cur0 - perf_b_req)
-    heap = list(zip(key0.tolist(), range(n), loss0.tolist()))
+    # all candidate lifts at once: lifting node j from level l to l-1
+    # loses loss_all[l-1][j] throughput and re-enters the heap keyed
+    # key_all[l-1][j] (lift loss minus slack over the per-board target)
+    loss_np = pruned[1:] - pruned[:-1]                    # (m-1, n)
+    key_np = loss_np - (pruned[1:] - perf_b_req[None, :])
+    min_loss = float(loss_np.min())
+    loss_all = loss_np.tolist()
+    key_all = key_np.tolist()
+    heap = list(zip(key_all[m - 2], range(n), loss_all[m - 2]))
     heapq.heapify(heap)
     lvl = levels.tolist()               # scalar ndarray writes are slow
     while heap:
         _, j, loss = heapq.heappop(heap)
         if total - loss < perf_req:
-            continue                    # total never grows: dead forever
+            # total never grows: this candidate is dead forever — and
+            # once even the cheapest lift anywhere cannot fit, so is
+            # every other entry still in the heap
+            if total - min_loss < perf_req:
+                break
+            continue
         lvl[j] -= 1
         total -= loss
-        if lvl[j] > 0:
-            cur = pruned[lvl[j], j]
-            up = pruned[lvl[j] - 1, j]
-            nl = cur - up
+        l = lvl[j]
+        if l > 0:
             # detlint: ok[DET003] DP loss heap, not an event queue: slot 1 is the unique node index j, so ties are impossible
-            heapq.heappush(heap, (nl - (cur - perf_b_req[j]), j, nl))
+            heapq.heappush(heap, (key_all[l - 1][j], j,
+                                  loss_all[l - 1][j]))
     return np.array(lvl, dtype=int)
+
+
+def _first_at_least(values: np.ndarray, thresh: float,
+                    chunk: int = 4096) -> int:
+    """Index of the first entry ``>= thresh`` in ``values`` (-1 when
+    none): one masked comparison + reduction per chunk, with the early
+    running-best cutoff — the caller orders ``values`` so the first hit
+    is already the global best, so the scan stops at the first chunk
+    containing one instead of masking all O(m^n) entries."""
+    n = len(values)
+    for start in range(0, n, chunk):
+        hit = values[start:start + chunk] >= thresh
+        if hit.any():
+            return start + int(hit.argmax())
+    return -1
 
 
 # ----------------------------------------------------------------------
@@ -331,8 +364,18 @@ class ExactOracle:
 
     The enumeration tensors (combos, per-combo totals and weighted
     accuracies) depend only on the profiling view, so they are cached on
-    ``ClusterState.plan_key`` — per plan, only the feasibility mask and
-    the arg-max selection run.
+    ``ClusterState.plan_key`` — per plan, only the feasibility check and
+    the arg-max selection run. That per-plan residue is fused: the cache
+    also holds a *quality order* (``np.lexsort`` by weighted accuracy
+    desc, total throughput desc, combo index asc — exactly the old
+    mask → argmax tie-break chain) and the totals gathered into that
+    order, so feasibility + argmax collapse to one chunked masked
+    reduction over the ordered totals with an early running-best cutoff:
+    the first entry meeting the throughput threshold *is* the optimum
+    (everything before it is infeasible, everything after it is no
+    better), so the scan stops at the first hit instead of touching all
+    O(m^n) combos. The infeasible fallback (``argmax(total)``) is
+    precomputed at cache-build time, making that path O(1) per plan.
     """
     name: str = "exact_oracle"
     max_enum_nodes: int = 7
@@ -375,24 +418,28 @@ class ExactOracle:
                                    f"{self.max_enum_combos}"}))
             meta = {"enum": "dominated_pruned", "n": n}
 
-        combos, total, wacc = self._enumerate(state, pruned, acc, cands)
-        feasible = total >= request.perf_req * 1.02
-        if feasible.any():
-            cand = np.flatnonzero(feasible)
-            # max accuracy; tie-break on max throughput, then first combo
-            w = wacc[cand]
-            sel = cand[w == w.max()]
-            best = int(sel[np.argmax(total[sel])])
-        else:
-            best = int(np.argmax(total))
+        combos, total_q, order, argmax_total = self._enumerate(
+            state, pruned, acc, cands)
+        # fused feasibility + weighted-accuracy argmax: the first combo
+        # in quality order whose total meets the threshold is the
+        # optimum (see the class docstring); infeasible grids take the
+        # precomputed best-effort max-throughput combo
+        pos = _first_at_least(total_q, request.perf_req * 1.02)
+        best = int(order[pos]) if pos >= 0 else argmax_total
         levels = combos[best]
         return _mk_plan(state, request, idx, levels.astype(int), self.name,
                         meta=meta)
 
     def _enumerate(self, state: ClusterState, pruned: np.ndarray,
                    acc: np.ndarray, cands) -> Tuple[np.ndarray, ...]:
-        """(combos, per-combo total perf, per-combo weighted accuracy),
-        cached per profiling view — request-independent."""
+        """(combos, totals in quality order, quality order, argmax of
+        the raw totals), cached per profiling view — request-independent.
+
+        The quality order ranks every combo by the exact tie-break chain
+        the plan residue needs — weighted accuracy desc, total
+        throughput desc, combo index asc (``np.lexsort`` is stable, so
+        equal (wacc, total) pairs keep index order) — turning the
+        per-plan selection into a first-hit scan over ``total_q``."""
         key = state.plan_key
         if key is not None:
             hit = self._enum_cache.get(key)
@@ -404,7 +451,9 @@ class ExactOracle:
         perfs = pruned[combos, np.arange(n)[None, :]]       # (combos, n)
         total = perfs.sum(axis=1)
         wacc = (perfs * acc[combos]).sum(axis=1) / total
-        out = (combos, total, wacc)
+        order = np.lexsort((-total, -wacc))
+        total_q = np.ascontiguousarray(total[order])
+        out = (combos, total_q, order, int(np.argmax(total)))
         if key is not None:
             if len(self._enum_cache) >= self._ENUM_CACHE_MAX:
                 self._enum_cache.clear()

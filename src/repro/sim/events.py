@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Iterable, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +70,24 @@ class EventQueue:
         heapq.heappush(self._heap, (time, seq, ev))
         return ev
 
+    def push_chunk(self,
+                   items: Iterable[Tuple[float, int, str, Dict[str, Any]]]
+                   ) -> None:
+        """Bulk-schedule pre-sequenced events: each item is ``(time, seq,
+        kind, payload)`` with the seq assigned by the caller (the sharded
+        root's pre-assigned arrival/fault numbering). One heapify over
+        the extended heap replaces per-item sift-downs, and the given
+        seqs are preserved exactly — a chunk push is byte-equivalent to
+        pushing the items one at a time with ``_seq=``, which is what
+        keeps the (time, seq) total order (and therefore ``cells=1``
+        byte-identity) independent of push granularity."""
+        heap = self._heap
+        for t, seq, kind, payload in items:
+            heap.append((t, seq,
+                         SimEvent(time=t, seq=seq, kind=kind,
+                                  payload=payload)))
+        heapq.heapify(heap)
+
     def pop(self) -> SimEvent:
         return heapq.heappop(self._heap)[2]
 
@@ -78,6 +96,15 @@ class EventQueue:
         empty) — the sharded root's merge loop reads every cell's head
         to pick the global (time, seq) minimum."""
         return self._heap[0][2]
+
+    def peek_key(self) -> Tuple[float, int]:
+        """The head's ``(time, seq)`` key without materializing the
+        event (raises IndexError when empty). The sharded root's merge
+        loop and the run-draining inner loop compare head keys far more
+        often than they handle events, so the key read must not touch
+        the SimEvent payload at all."""
+        head = self._heap[0]
+        return (head[0], head[1])
 
     def __len__(self) -> int:
         return len(self._heap)

@@ -30,6 +30,19 @@ is built around seq-number bookkeeping that makes this exact:
     unique, so the order is total — and with one cell it is exactly the
     heap order the unsharded loop would have followed.
 
+The hot loop (:meth:`ShardedSimulator.run`) realizes that order with an
+indexed min-heap over the cell queue heads plus **batched run-draining**:
+once a cell holds the global minimum, its events are popped in a tight
+inner loop (``OnlineSimulator.process_run``) for as long as its head key
+stays below every other cell head, the next unrouted arrival, and the
+next rebalance tick — handling an event only ever schedules follow-ups
+into the *same* cell's queue, so no other merge candidate can move while
+a run is in flight and the pop order is byte-identical to the per-event
+merge. :meth:`ShardedSimulator.run_reference` retains that per-event
+merge as the bit-identity twin (the ``reference:`` pattern from
+``repro.sched.reference``); tests and ``BENCH_8.json`` pin the two
+against each other. See sim/README.md §"Root merge loop".
+
 Routing happens at the arrival's own timestamp (it is routed only once
 it is the global minimum), so least-backlog decisions see the same
 outstanding-work state a real front-end would at that instant.
@@ -45,7 +58,9 @@ guarantee are unaffected.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import heapq
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -61,6 +76,13 @@ from repro.sched.shard import (CellRouter, CellSpec, partition_fleet,
 from repro.sim.events import EventQueue, SeqCounter
 from repro.sim.simulator import (OnlineSimulator, RequestRecord, SimReport,
                                  TimedFault)
+
+
+def _scaling_order(action: ScalingAction) -> Tuple[float, str]:
+    """Merge order for per-cell autoscaler action logs: decision time,
+    node name as the deterministic tie-break (cells act independently,
+    so same-instant actions have no inherent order)."""
+    return (action.decided_s, action.node)
 
 
 class ShardedSimulator:
@@ -109,23 +131,25 @@ class ShardedSimulator:
         self.rebalance_s = rebalance_s
         self.steal_threshold_s = steal_threshold_s
         # root-level trace validation (the cells see empty traces, so the
-        # unsharded constructor's checks move here), plus the merge-loop
-        # precondition: pre-assigned seq i for arrival i only yields the
-        # unsharded heap order if the trace is time-sorted
+        # unsharded constructor's checks move here). The time-sorted
+        # check is the merge-loop precondition — pre-assigned seq i for
+        # arrival i only yields the unsharded heap order, and the
+        # run-draining bound on the next unrouted arrival only holds, if
+        # the trace is time-sorted — asserted once over the whole trace
+        # here so the merge loop never re-checks it per event.
+        self._arrivals = list(arrivals)
+        times = [t for t, _ in self._arrivals]
+        assert all(a <= b for a, b in zip(times, times[1:])), (
+            "arrival trace must be time-sorted for the sharded merge")
         seen_rids = set()
-        prev_t = -float("inf")
-        for t, req in arrivals:
+        for t, req in self._arrivals:
             assert abs(req.arrival_s - t) < 1e-9, (
                 f"request {req.rid}: arrival_s={req.arrival_s} disagrees "
                 f"with its scheduled arrival time {t}")
             assert req.rid not in seen_rids, (
                 f"duplicate rid {req.rid} in arrival trace; records and "
                 "share accounting are keyed by rid")
-            assert t >= prev_t, (
-                "arrival trace must be time-sorted for the sharded merge")
             seen_rids.add(req.rid)
-            prev_t = t
-        self._arrivals = list(arrivals)
 
         self.specs: List[CellSpec] = partition_fleet(
             profiles, cells, strategy)
@@ -193,13 +217,18 @@ class ShardedSimulator:
         self.router = CellRouter(self.specs, policy=router,
                                  capacities=capacities)
         # faults go to their owner cell up front with the seq numbers the
-        # unsharded constructor would have assigned (A..A+F-1)
+        # unsharded constructor would have assigned (A..A+F-1), chunked
+        # per owner cell (one heapify per cell instead of F sift-downs;
+        # push_chunk preserves the pre-assigned seqs exactly)
+        fault_chunks: Dict[int, List] = collections.defaultdict(list)
         for fi, f in enumerate(faults):
             if f.node not in owner:
                 raise ValueError(f"fault targets unknown node {f.node!r}")
-            self.cells[owner[f.node]].events.push(
-                f.time, f.kind, _seq=n_arr + fi,
-                node=f.node, slowdown=f.slowdown)
+            fault_chunks[owner[f.node]].append(
+                (f.time, n_arr + fi, f.kind,
+                 {"node": f.node, "slowdown": f.slowdown}))
+        for c, chunk in fault_chunks.items():
+            self.cells[c].events.push_chunk(chunk)
         self.routed_cell: Dict[int, int] = {}     # rid -> cell id
         self.rebalances: List[Tuple[float, str, int, int]] = []
         self._root_log: List[str] = []
@@ -231,7 +260,125 @@ class ShardedSimulator:
             f"(load {loads[src]:.3f}s -> {loads[dst]:.3f}s)")
 
     # ---- main loop -----------------------------------------------------
+    def _overflow(self, n_events: int) -> RuntimeError:
+        """Diagnosable MAX_EVENTS overflow: which run blew up, how many
+        cells were merging, and where each cell's clock had advanced —
+        enough to tell a runaway self-scheduling cell from a trace that
+        is simply too long for the cap."""
+        clocks = ", ".join(f"cell{i}={cell.clock.now:.3f}s"
+                           for i, cell in enumerate(self.cells))
+        return RuntimeError(
+            f"sharded simulator exceeded MAX_EVENTS={self.MAX_EVENTS} "
+            f"(n_events={n_events}, cells={len(self.cells)}, "
+            f"per-cell clock.now: {clocks})")
+
     def run(self) -> SimReport:
+        """Merged event loop: indexed min-heap over cell queue heads
+        with lazy head revalidation, plus batched run-draining — the
+        root pays merge cost per *run* of events instead of per event.
+        The pop order (and therefore every record, log line, and digest)
+        is byte-identical to :meth:`run_reference`, the retained
+        per-event merge twin; see the module docstring for why runs
+        cannot reorder events."""
+        for cell in self.cells:
+            if not cell.gn._profiled:
+                cell.gn.startup()
+        t0 = time.perf_counter()  # detlint: ok[DET001] wall_s telemetry only; excluded from the golden digests
+        arr = self._arrivals
+        n_arr = len(arr)
+        ai = 0
+        n_events = 0
+        cells = self.cells
+        multi = len(cells) > 1
+        max_events = self.MAX_EVENTS
+        next_reb = (self.rebalance_s
+                    if (multi and self.rebalance_s > 0) else float("inf"))
+        route = self.router.route
+        routed_cell = self.routed_cell
+        heappop = heapq.heappop
+        heappush = heapq.heappush
+        # indexed min-heap over the cell queue heads: entries are
+        # (time, seq, cell_id, version). Only the cell being drained (or
+        # routed into) can change its head — handling an event schedules
+        # follow-ups into the same cell's queue only — so entries for
+        # every *other* cell stay exact, and staleness is tracked with a
+        # per-cell version counter: bumping ver[c] retires c's entry
+        # wherever it sits in the heap (lazy revalidation — it is
+        # discarded when it surfaces, never searched for).
+        ver = [0] * len(cells)
+        heads = []
+        for c, cell in enumerate(cells):
+            if cell.events:
+                t, s = cell.events.peek_key()
+                heads.append((t, s, c, 0))
+        heapq.heapify(heads)
+
+        def fresh_top():
+            while heads:
+                e = heads[0]
+                if e[3] == ver[e[2]]:
+                    return e
+                heappop(heads)          # stale: its cell re-pushed below
+            return None
+
+        while True:
+            top = fresh_top()
+            take_arrival = ai < n_arr and (
+                top is None or (arr[ai][0], ai) < (top[0], top[1]))
+            if top is None and not take_arrival:
+                break
+            next_t = arr[ai][0] if take_arrival else top[0]
+            if next_t >= next_reb:
+                self._do_rebalance(next_reb)
+                next_reb += self.rebalance_s
+                continue
+            if take_arrival:
+                t, req = arr[ai]
+                c = route(req)
+                routed_cell[req.rid] = c
+                cell = cells[c]
+                # pre-assigned seq: exactly what the unsharded
+                # constructor would have given this arrival. It is the
+                # global minimum right now, so it pops immediately; the
+                # routed cell's heap entry (if any) goes stale.
+                cell.events.push(t, "arrival", _seq=ai, request=req)
+                ai += 1
+                ver[c] += 1
+                cell.process_next()
+                n_events += 1
+            else:
+                heappop(heads)          # the winner; live per fresh_top
+                c = top[2]
+                cell = cells[c]
+            # run-draining: pop this cell's events in a tight inner loop
+            # while its head key stays below every other cell head, the
+            # next unrouted arrival, and the next rebalance tick (events
+            # at exactly the tick must wait for the rebalance, hence the
+            # -1 sentinel seq)
+            nxt = fresh_top()
+            bound = (next_reb, -1)
+            if nxt is not None and (nxt[0], nxt[1]) < bound:
+                bound = (nxt[0], nxt[1])
+            if ai < n_arr and (arr[ai][0], ai) < bound:
+                bound = (arr[ai][0], ai)
+            n_events += cell.process_run(bound, max_events + 1 - n_events)
+            if n_events > max_events:
+                raise self._overflow(n_events)
+            if cell.events:
+                t, s = cell.events.peek_key()
+                # detlint: ok[DET003] root head-index over per-cell EventQueue heads: (t, s) is a queue head's own (time, seq) key, seqs globally unique via the shared SeqCounter
+                heappush(heads, (t, s, c, ver[c]))
+        wall_s = time.perf_counter() - t0  # detlint: ok[DET001] wall_s telemetry only; excluded from the golden digests
+        return self._report(n_events, wall_s, multi)
+
+    def run_reference(self) -> SimReport:
+        """Per-event reference merge — the retained pre-optimization
+        twin of :meth:`run` (the ``reference:`` pattern from
+        ``repro.sched.reference``): a linear O(cells) scan over every
+        cell queue head per event, one pop per iteration. Kept verbatim
+        so the property tests can pin run-draining's event stream
+        against it and ``bench_sched.py``'s merge section (BENCH_8.json)
+        can measure the speedup on identical traffic."""
         for cell in self.cells:
             if not cell.gn._profiled:
                 cell.gn.startup()
@@ -278,7 +425,7 @@ class ShardedSimulator:
             best_cell.process_next()
             n_events += 1
             if n_events > self.MAX_EVENTS:
-                raise RuntimeError("sharded simulator exceeded MAX_EVENTS")
+                raise self._overflow(n_events)
         wall_s = time.perf_counter() - t0  # detlint: ok[DET001] wall_s telemetry only; excluded from the golden digests
         return self._report(n_events, wall_s, multi)
 
@@ -292,17 +439,19 @@ class ShardedSimulator:
         for cell in self.cells:
             if cell.autoscaler is not None:
                 scaling.extend(cell.autoscaler.actions)
-        admission_counts: Dict[str, int] = {}
+        # Counter.update keeps first-seen key insertion order, exactly
+        # like the hand-rolled dict.get loop it replaces — the digest
+        # over the cells=1 report hashes that order
+        admission_counts: collections.Counter = collections.Counter()
         for cell in self.cells:
             if cell.admission is not None:
-                for k, v in cell.admission.counts.items():
-                    admission_counts[k] = admission_counts.get(k, 0) + v
+                admission_counts.update(cell.admission.counts)
         if multi:
             log = [f"[cell{i}] {line}"
                    for i, cell in enumerate(self.cells)
                    for line in cell.log]
             log.extend(self._root_log)
-            scaling.sort(key=lambda a: (a.decided_s, a.node))
+            scaling.sort(key=_scaling_order)
         else:
             # cells=1: no prefix, no root lines, original action order —
             # the report is byte-identical to the unsharded simulator's
@@ -311,7 +460,8 @@ class ShardedSimulator:
             policy=self.cells[0].gn.policy, scenario=self.scenario,
             horizon_s=self.horizon_s,
             records=[records[k] for k in sorted(records)],
-            log=log, scaling=scaling, admission_counts=admission_counts,
+            log=log, scaling=scaling,
+            admission_counts=dict(admission_counts),
             end_s=max(cell.clock.now for cell in self.cells),
             n_events=n_events, wall_s=wall_s)
 
