@@ -601,18 +601,27 @@ def main(argv=None) -> int:
                     print(",".join(out))
                     if args.tenants and "tenants" in row:
                         _print_tenants(row)
+    # plan-cache effectiveness across the sweep: the counters ride on
+    # every row's summary, so the aggregate hit rate is free to report
+    hits = sum(row.get("plan_cache_hits", 0.0) for row in rows)
+    misses = sum(row.get("plan_cache_misses", 0.0) for row in rows)
+    if hits + misses > 0:
+        print(f"plan cache: {hits:.0f}/{hits + misses:.0f} plans reused "
+              f"(hit rate {hits / (hits + misses):.3f})", file=sys.stderr)
     if profiler is not None:
         import pstats
+
+        import profile_rollup
         profiler.dump_stats(args.profile)
+        rollup = profile_rollup.module_rollup(profiler)
+        print(f"profile: {profile_rollup.format_rollup(rollup)} across "
+              f"{len(rows)} run(s) -> {args.profile} "
+              "(inspect: python -m pstats)", file=sys.stderr)
         st = pstats.Stats(profiler)
         entries = sorted(
             ((tt, ct, f"{os.path.basename(fn)}:{name}")
              for (fn, _line, name), (_cc, _nc, tt, ct, _callers)
              in st.stats.items()), reverse=True)
-        total_tt = sum(e[0] for e in entries)
-        print(f"profile: {total_tt:.2f}s CPU in the event loop across "
-              f"{len(rows)} run(s) -> {args.profile} "
-              "(inspect: python -m pstats)", file=sys.stderr)
         for tt, ct, name in entries[:10]:
             print(f"  {tt:8.3f}s self  {ct:8.3f}s cum  {name}",
                   file=sys.stderr)

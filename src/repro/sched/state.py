@@ -133,10 +133,17 @@ class ClusterState:
         besides the request — the profiling view identity (table version),
         the serving mask, and the engine-batch cap the plan prices at.
         None when the snapshot has no version (hand-built), which
-        disables memoization."""
+        disables memoization. Cached on the instance: the planners and
+        the plan-reuse cache read it once or more per arrival, and the
+        tuple build is pure over frozen fields."""
         if self.perf_version is None:
             return None
-        return (self.perf_version, self.available, self.max_batch)
+        key = self.__dict__.get("_plan_key")
+        if key is None:
+            key = (self.perf_version, self.available, self.max_batch)
+            # detlint: ok[DET004] memo-cache fill: value is a pure function of frozen fields, identical on any interleaving
+            object.__setattr__(self, "_plan_key", key)
+        return key
 
     @property
     def batched(self) -> bool:

@@ -73,6 +73,7 @@ from repro.core.requests import InferenceRequest
 from repro.core.resource_manager import GatewayNode
 from repro.sched.shard import (CellRouter, CellSpec, partition_fleet,
                                pick_rebalance)
+from repro.sim import events_reference
 from repro.sim.events import EventQueue, SeqCounter
 from repro.sim.simulator import (OnlineSimulator, RequestRecord, SimReport,
                                  TimedFault)
@@ -124,7 +125,13 @@ class ShardedSimulator:
                  fairshare_weights: Optional[Dict[str, float]] = None,
                  fairshare_quantum: int = 1024,
                  rebalance_s: float = 0.0,
-                 steal_threshold_s: float = 1.0):
+                 steal_threshold_s: float = 1.0,
+                 reference_stack: bool = False):
+        # reference_stack=True builds every cell on the retained pre-slab
+        # stack: events_reference.EventQueue instead of the slab queue,
+        # and plan reuse disabled on every planner (gateway + gate). The
+        # hotpath benchmark and the property twins pin the fast stack's
+        # event stream byte-identically against this one.
         self.scenario = scenario
         self.horizon_s = horizon_s or (
             max((t for t, _ in arrivals), default=0.0))
@@ -155,6 +162,8 @@ class ShardedSimulator:
             profiles, cells, strategy)
         n_arr, n_faults = len(self._arrivals), len(faults)
         counter = SeqCounter(n_arr + n_faults)
+        queue_cls = (events_reference.EventQueue if reference_stack
+                     else EventQueue)
         standby_set = {p.name for p in profiles if not p.available}
         owner: Dict[str, int] = {}
         capacities: List[float] = []
@@ -184,7 +193,8 @@ class ShardedSimulator:
                               for t, r in admission_tenant_rates.items()}
                 adm = AdmissionController(ctable, rate=rate,
                                           burst=admission_burst,
-                                          tenant_rates=trates)
+                                          tenant_rates=trates,
+                                          plan_cache=not reference_stack)
             asc = None
             if autoscale:
                 # constructed even when this cell drew no standby nodes:
@@ -199,11 +209,20 @@ class ShardedSimulator:
                 # the cells=1 byte-identity guarantee is untouched.
                 fss = FairShareScheduler(fairshare_weights,
                                          quantum_items=fairshare_quantum)
+            if reference_stack:
+                reuse = getattr(gn.policy_obj, "_reuse", None)
+                if reuse is not None:
+                    reuse.enabled = False
             cell = OnlineSimulator(
                 gn, (), (), scenario=scenario, horizon_s=self.horizon_s,
                 admission=adm, autoscaler=asc, fairshare=fss,
                 formation_window_s=formation_window_s,
-                event_queue=EventQueue(counter))
+                event_queue=queue_cls(counter))
+            if reference_stack:
+                # the reference drain also dispatches through the
+                # retained pre-fusion if/elif chain, so the hotpath
+                # benchmark measures slab + fusion + reuse together
+                cell._handle = cell._handle_reference
             cell.on_settled = (
                 lambda rec, c=spec.cell_id: self._settled(c, rec))
             self.cells.append(cell)
@@ -446,6 +465,13 @@ class ShardedSimulator:
         for cell in self.cells:
             if cell.admission is not None:
                 admission_counts.update(cell.admission.counts)
+        # per-cell planners are distinct objects (fresh policy instance
+        # per cell), so summing the per-cell deduped counts is exact
+        plan_hits = plan_misses = 0
+        for cell in self.cells:
+            h, m = cell.plan_cache_counts()
+            plan_hits += h
+            plan_misses += m
         if multi:
             log = [f"[cell{i}] {line}"
                    for i, cell in enumerate(self.cells)
@@ -463,7 +489,8 @@ class ShardedSimulator:
             log=log, scaling=scaling,
             admission_counts=dict(admission_counts),
             end_s=max(cell.clock.now for cell in self.cells),
-            n_events=n_events, wall_s=wall_s)
+            n_events=n_events, wall_s=wall_s,
+            plan_cache_hits=plan_hits, plan_cache_misses=plan_misses)
 
     # ---- introspection (benchmarks) ------------------------------------
     def plans_made(self) -> int:

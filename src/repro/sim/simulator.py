@@ -57,7 +57,8 @@ from repro.core.requests import (Assignment, Dispatch, ExecutionResult,
                                  violation_summary)
 from repro.core.resource_manager import Event, GatewayNode
 from repro.sched import ClusterState, Plan
-from repro.sim.events import EventQueue, SimClock, SimEvent
+from repro.sim.events import (EventQueue, SimClock, SimEvent,
+                              SlabEventQueue)
 
 
 @dataclasses.dataclass
@@ -298,6 +299,11 @@ class SimReport:
     end_s: float = 0.0                # sim clock when the last event fired
     n_events: int = 0                 # events the loop processed
     wall_s: float = 0.0               # host wall-clock of run()
+    # plan-reuse cache effectiveness over the run (policy-level reuse
+    # across gate + dispatch planning); excluded from the golden digests
+    # like wall_s/n_events — telemetry, not behaviour
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
 
     def summary(self) -> Dict[str, float]:
         """Aggregate metrics. Latency / deadline metrics cover *admitted*
@@ -340,6 +346,8 @@ class SimReport:
         s["plan_fallbacks"] = float(sum(
             1 for r in self.records
             if r.plan is not None and "fallback" in r.plan.meta))
+        s["plan_cache_hits"] = float(self.plan_cache_hits)
+        s["plan_cache_misses"] = float(self.plan_cache_misses)
         spawns = [a for a in self.scaling if a.kind == SPAWN]
         lat = [a.ready_s - a.decided_s for a in spawns]
         s["scale_ups"] = float(len(spawns))
@@ -481,6 +489,27 @@ class OnlineSimulator:
         self.nodes: Dict[str, NodeRuntime] = {
             n.name: NodeRuntime(n.name, self.batching)
             for n in gn.table.nodes}
+        # batching.enabled is a property chain; the fused event loop
+        # branches on it once per event, so hoist it (BatchFormation is
+        # frozen — the flag cannot change mid-run)
+        self._batched = self.batching.enabled
+        # fused dispatch: one handler per event kind, payload-dict in —
+        # replaces the _handle if/elif chain on the hot path. Handlers
+        # fold the follow-up work (finalize -> start-next) of the old
+        # _handle -> _share_done -> _complete_share -> _maybe_start
+        # call chain into one pass; event *semantics* and event *counts*
+        # are unchanged (see process_run).
+        self._handlers: Dict[str, Callable[[Dict], None]] = {
+            "arrival": self._ev_arrival,
+            "share_done": self._ev_share_done,
+            "batch_done": self._ev_batch_done,
+            "batch_launch": self._ev_batch_launch,
+            "node_up": self._ev_node_up,
+            "disconnect": self._ev_disconnect,
+            "reconnect": self._ev_reconnect,
+            "straggler": self._ev_straggler,
+            "straggler_clear": self._ev_straggler_clear,
+        }
         self.records: Dict[int, RequestRecord] = {}
         self.log: List[str] = []
         self.scenario = scenario
@@ -512,12 +541,13 @@ class OnlineSimulator:
         if not self.gn._profiled:
             self.gn.startup()
         t0 = time.perf_counter()  # detlint: ok[DET001] wall_s telemetry only; excluded from the golden digests
-        n_events = 0
-        while self.events:
-            self.process_next()
-            n_events += 1
-            if n_events > self.MAX_EVENTS:
-                raise RuntimeError("simulator exceeded MAX_EVENTS")
+        # the whole run is one unbounded drain through the fused loop;
+        # the limit keeps the old per-event MAX_EVENTS guard exact (the
+        # pre-fusion loop raised after processing event MAX_EVENTS + 1)
+        n_events = self.process_run((float("inf"), -1), self.MAX_EVENTS + 1)
+        if n_events > self.MAX_EVENTS:
+            raise RuntimeError("simulator exceeded MAX_EVENTS")
+        hits, misses = self.plan_cache_counts()
         return SimReport(policy=self.gn.policy, scenario=self.scenario,
                          horizon_s=self.horizon_s,
                          records=[self.records[k]
@@ -529,7 +559,26 @@ class OnlineSimulator:
                                            if self.admission else {}),
                          end_s=self.clock.now,
                          n_events=n_events,
+                         plan_cache_hits=hits, plan_cache_misses=misses,
                          wall_s=time.perf_counter() - t0)  # detlint: ok[DET001] wall_s telemetry only; excluded from the golden digests
+
+    def plan_cache_counts(self) -> Tuple[int, int]:
+        """(hits, misses) of the plan-reuse caches this run planned
+        through: the GN's dispatch policy and the admission gate's
+        planner — usually the same object, deduped by identity so shared
+        counters are never double-counted."""
+        hits = misses = 0
+        seen = set()
+        planners = [self.gn.policy_obj]
+        if self.admission is not None and self.admission.policy is not None:
+            planners.append(self.admission.policy)
+        for pol in planners:
+            reuse = getattr(pol, "_reuse", None)
+            if reuse is not None and id(reuse) not in seen:  # detlint: ok[DET006] identity-dedup of shared counter objects (gate and GN usually share one planner); never an ordering key
+                seen.add(id(reuse))  # detlint: ok[DET006] same identity-dedup set
+                hits += reuse.hits
+                misses += reuse.misses
+        return hits, misses
 
     def process_next(self) -> SimEvent:
         """Pop and handle the earliest scheduled event. ``run()`` is this
@@ -564,48 +613,100 @@ class OnlineSimulator:
         exactly the per-event overhead the run variant exists to remove.
         ``limit`` keeps the MAX_EVENTS runaway guard exact: an unbounded
         run (e.g. a lone cell with no arrivals left) could otherwise
-        self-schedule past the cap before the root sees a count."""
-        heap = self.events._heap
+        self-schedule past the cap before the root sees a count.
+
+        Two drain bodies, one contract: the slab queue's fast path pops
+        raw (time, seq, slot) triples and jumps straight through the
+        handler table — no SimEvent, no ``_handle`` frame; any other
+        queue (the retained reference twin) drains through
+        ``pop``/``_handle``. Same pops, same sanitizer assert, same
+        clock advance, same handlers — byte-identical event streams
+        (pinned by tests/test_eventloop_property.py)."""
+        events = self.events
         clock = self.clock
-        handle = self._handle
         sanitize = self.sanitize
+        bt, bs = bound
         n = 0
-        while n < limit and heap:
-            head = heap[0]
-            key = (head[0], head[1])
+        if type(events) is SlabEventQueue:
+            heap = events._heap
+            kinds = events._kind
+            payloads = events._payload
+            free = events._free
+            handlers = self._handlers
+            heappop = heapq.heappop
+            while n < limit and heap:
+                head = heap[0]
+                t = head[0]
+                if t > bt or (t == bt and head[1] >= bs):
+                    break
+                t, seq, slot = heappop(heap)
+                if sanitize:
+                    key = (t, seq)
+                    assert key > self._san_last, (
+                        f"event order violated: {key} after "
+                        f"{self._san_last}")
+                    self._san_last = key
+                # clock.advance_to, inlined: heap pop order is non-
+                # decreasing per queue, so the backwards-clock assert is
+                # structurally unreachable here
+                if t > clock.now:
+                    clock.now = t
+                kind = kinds[slot]
+                payload = payloads[slot]
+                kinds[slot] = None
+                payloads[slot] = None
+                free.append(slot)
+                h = handlers.get(kind)
+                if h is None:
+                    raise ValueError(f"unknown sim event kind: {kind}")
+                h(payload)
+                n += 1
+            return n
+        handle = self._handle
+        while n < limit and events:
+            key = events.peek_key()
             if key >= bound:
                 break
-            ev = heapq.heappop(heap)[2]
+            ev = events.pop()
             if sanitize:
                 assert key > self._san_last, (
                     f"event order violated: {key} after "
                     f"{self._san_last}")
                 self._san_last = key
-            # clock.advance_to, inlined: heap pop order is non-
-            # decreasing per queue, so the backwards-clock assert is
-            # structurally unreachable here
-            if head[0] > clock.now:
-                clock.now = head[0]
+            if key[0] > clock.now:
+                clock.now = key[0]
             handle(ev)
             n += 1
         return n
 
     def _handle(self, ev: SimEvent):
+        """Compatibility dispatch for SimEvent consumers (``process_next``
+        and the reference drain): one table lookup instead of the old
+        if/elif chain, same handlers, same unknown-kind error."""
+        h = self._handlers.get(ev.kind)
+        if h is None:
+            raise ValueError(f"unknown sim event kind: {ev.kind}")
+        h(ev.payload)
+
+    def _handle_reference(self, ev: SimEvent):
+        """The pre-fusion dispatch chain, retained verbatim: if/elif
+        kind dispatch into the unfused helper methods (``_share_done``
+        -> ``_complete_share`` -> ``_maybe_start``). The hotpath
+        benchmark's reference stack (``ShardedSimulator(
+        reference_stack=True)``) rebinds ``_handle`` to this, and the
+        property twins pin its event stream byte-identically against
+        the fused handler table — fusion is a call-graph collapse, not
+        a semantics change."""
         now = self.clock.now
         if ev.kind == "arrival":
             req: InferenceRequest = ev.payload["request"]
             rec = RequestRecord(request=req, arrival_s=req.arrival_s)
             self.records[req.rid] = rec
             if self.fairshare is not None:
-                # tenant FIFO first; the DRR ring decides who reaches
-                # the gate, so a flooding tenant queues behind its own
-                # share instead of ahead of everyone else's arrivals
                 self.fairshare.enqueue(req)
                 self._fair_drain(now)
                 self._autoscale_tick(now, None)
                 return
-            # one ClusterState snapshot per event, shared by both
-            # controllers (and by the plan the gate hands to the queues)
             state = (self._snapshot(now) if self.admission is not None
                      or self._autoscaler_ready(now) else None)
             self._admit(rec, now, state)
@@ -633,6 +734,87 @@ class OnlineSimulator:
                       f"slowdown={slowdown:g}")
         else:
             raise ValueError(f"unknown sim event kind: {ev.kind}")
+
+    # ---- fused event handlers (payload-dict in, one per kind) --------
+    def _ev_arrival(self, payload: Dict):
+        now = self.clock.now
+        req: InferenceRequest = payload["request"]
+        rec = RequestRecord(request=req, arrival_s=req.arrival_s)
+        self.records[req.rid] = rec
+        if self.fairshare is not None:
+            # tenant FIFO first; the DRR ring decides who reaches
+            # the gate, so a flooding tenant queues behind its own
+            # share instead of ahead of everyone else's arrivals
+            self.fairshare.enqueue(req)
+            self._fair_drain(now)
+            self._autoscale_tick(now, None)
+            return
+        # one ClusterState snapshot per event, shared by both
+        # controllers (and by the plan the gate hands to the queues)
+        state = (self._snapshot(now) if self.admission is not None
+                 or self._autoscaler_ready(now) else None)
+        self._admit(rec, now, state)
+        if self.autoscaler is not None:
+            self._autoscale_tick(now, state)
+
+    def _ev_share_done(self, payload: Dict):
+        # the old _share_done -> _complete_share -> _maybe_start chain,
+        # fused: finalize the share and start the node's next share in
+        # one pass (same node, same timestamp, strictly larger seq for
+        # any follow-up event — the run-draining safety argument)
+        nq = self.nodes[payload["node"]]
+        share = nq.running
+        if share is not None and share.share_id == payload["share_id"]:
+            nq.running = None
+            rec = self.records[share.rid]
+            if share.epoch == rec.epoch and not rec.done:
+                rec.per_node_time[nq.name] = share.service_s
+                rec.queue_wait_s = max(rec.queue_wait_s,
+                                       share.start_s - rec.dispatch_s)
+                rec.pending_shares -= 1
+                if rec.pending_shares == 0:
+                    self._finalize(rec)
+            # else: a share of a superseded dispatch generation —
+            # discard, the node just paid the time.
+            if self._batched:
+                self._maybe_start_batched(nq)
+            elif nq.up and nq.running is None and nq.queue:
+                # _finalize above may have started this node already
+                # (fair-share drain admitting new work) — re-check
+                self._start_next(nq)
+        if self.autoscaler is not None:
+            self._autoscale_tick(self.clock.now, None)
+
+    def _ev_batch_done(self, payload: Dict):
+        self._batch_done(payload["node"], payload["op_id"])
+        if self.autoscaler is not None:
+            self._autoscale_tick(self.clock.now, None)
+
+    def _ev_batch_launch(self, payload: Dict):
+        self._batch_launch(payload["node"], payload["token"])
+
+    def _ev_node_up(self, payload: Dict):
+        self._node_up(payload["node"])
+
+    def _ev_disconnect(self, payload: Dict):
+        self._disconnect(payload["node"])
+
+    def _ev_reconnect(self, payload: Dict):
+        self._reconnect(payload["node"])
+
+    def _ev_straggler(self, payload: Dict):
+        node = payload["node"]
+        slowdown = payload["slowdown"]
+        self.gn.handle(Event(kind="straggler", node=node,
+                             slowdown=slowdown, time=self.clock.now))
+        self._log(f"straggler node={node} slowdown={slowdown:g}")
+
+    def _ev_straggler_clear(self, payload: Dict):
+        # clearing ignores the payload's slowdown, exactly as before
+        node = payload["node"]
+        self.gn.handle(Event(kind="straggler", node=node,
+                             slowdown=1.0, time=self.clock.now))
+        self._log(f"straggler_clear node={node} slowdown={1.0:g}")
 
     # ---- closed-loop control ----------------------------------------
     def _share_pred(self, share: _Share) -> float:
@@ -819,22 +1001,38 @@ class OnlineSimulator:
         rec.pending_shares = sum(1 for a in d.assignments if a.items > 0)
         pred = self._share_pred
         version = self.backend.pred_version
+        nodes = self.nodes
+        batched = self._batched
+        rid = rec.request.rid
+        epoch = rec.epoch
+        seq = self._share_seq
         for a in d.assignments:
             if a.items == 0:
                 continue
-            self._share_seq += 1
-            share = _Share(share_id=self._share_seq, rid=rec.request.rid,
-                           epoch=rec.epoch, assignment=a, enqueue_s=now)
-            nq = self.nodes[a.node]
+            seq += 1
+            share = _Share(share_id=seq, rid=rid,
+                           epoch=epoch, assignment=a, enqueue_s=now)
+            nq = nodes[a.node]
             nq.enqueue(share, pred, version)
-            self._maybe_start(nq)
+            # enqueue-then-start, fused (idle-node fast path: the share
+            # just enqueued is the head)
+            if batched:
+                self._maybe_start_batched(nq)
+            elif nq.up and nq.running is None:
+                self._start_next(nq)
+        self._share_seq = seq
 
     def _maybe_start(self, nq: NodeRuntime):
-        if self.batching.enabled:
+        if self._batched:
             self._maybe_start_batched(nq)
             return
         if not nq.up or nq.running is not None or not nq.queue:
             return
+        self._start_next(nq)
+
+    def _start_next(self, nq: NodeRuntime):
+        """Start the node's next queued share (caller checked up/idle/
+        non-empty): pop, price, and schedule its completion."""
         share = nq.pop_next()
         share.start_s = self.clock.now
         share.service_s = self.backend.assignment_time(share.assignment)

@@ -8,3 +8,17 @@ def schedule(heap, time_s: float, payload: dict):
 
 def reschedule(heap, time_s: float, payload: dict):
     heapq.heapreplace(heap, (time_s, payload))
+
+
+class TimerWheel:
+    # a push *method* is not enough: the structural allowlist is by
+    # Class.method qualname, and TimerWheel is not an event queue
+    def push(self, time_s: float, payload: dict):
+        heapq.heappush(self._heap, (time_s, payload))
+
+
+class SlabEventQueue:
+    # right class, wrong method — only push/push_chunk are the
+    # sanctioned wrappers
+    def schedule(self, time_s: float, payload: dict):
+        heapq.heappush(self._heap, (time_s, payload))

@@ -318,7 +318,11 @@ def test_fast_vs_legacy_identity_with_batching(pool):
                 admission=AdmissionController(table),
                 legacy_control_plane=legacy).run())
         fast, legacy = (r.summary() for r in reps)
-        mism = [k for k in fast if abs(fast[k] - legacy[k]) > 1e-9]
+        # plan-cache counters are excluded: the reference policy plans
+        # cold by design, so its hit/miss counts are trivially zero
+        mism = [k for k in fast
+                if not k.startswith("plan_cache")
+                and abs(fast[k] - legacy[k]) > 1e-9]
         assert not mism, (max_batch, mism)
 
 

@@ -238,6 +238,10 @@ def test_fast_control_plane_matches_legacy(pool, scenario):
     sf, sl = fast.summary(), legacy.summary()
     assert sf.keys() == sl.keys()
     for k in sf:
+        if k.startswith("plan_cache"):
+            # the reference policy plans cold by design; its counters
+            # are trivially zero while the fast stack's are not
+            continue
         assert sf[k] == pytest.approx(sl[k], abs=1e-9), k
     assert len(fast.log) == len(legacy.log)
     assert fast.n_events == legacy.n_events > 0
